@@ -1,0 +1,52 @@
+"""Shared benchmark substrate: default FL config + timing helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+from repro.fl.engine import FLConfig
+
+# CPU-scale analog of the paper's setup: 100 clients / CIFAR -> 12
+# clients / gaussian-mixture with disjoint public distribution.  Chosen
+# so methods separate within ~1 minute per run.
+def default_cfg(**kw) -> FLConfig:
+    base = dict(
+        n_clients=12,
+        n_classes=10,
+        dim=16,
+        cluster_scale=2.0,
+        noise=2.5,
+        rounds=60,
+        local_steps=4,
+        distill_steps=4,
+        lr=0.15,
+        lr_dist=0.3,
+        public_size=1200,
+        public_per_round=120,
+        private_size=1500,
+        alpha=0.05,
+        hidden=48,
+        mlp_depth=2,
+        seed=0,
+        eval_every=10,
+    )
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def timeit(fn: Callable, n: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(rows: List[Dict]) -> None:
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', 0.0):.1f},{r.get('derived', '')}")

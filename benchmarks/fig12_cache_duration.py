@@ -1,0 +1,31 @@
+"""Paper Fig. 12: cache-duration D ablation (accuracy vs communication
+trade-off; D=0 no cache, conservative D saves comm at ~no cost, huge D
+degrades with stale labels).  Derived: final acc + cumulative MB per D."""
+from __future__ import annotations
+
+from benchmarks._common import default_cfg, emit
+from repro.fl.engine import run_method
+
+
+def run(rounds: int = 80):
+    cfg = default_cfg(alpha=0.05, rounds=rounds)
+    rows = []
+    for D in (0, 5, 10, 25, 50, 200):
+        h = run_method("scarlet", cfg, cache_duration=D,
+                       use_cache=D > 0, beta=1.5)
+        mb = h.ledger.summary()["cumulative_total"] / 1e6
+        rows.append({
+            "name": f"fig12_D{D}",
+            "us_per_call": 0.0,
+            "derived": f"server_acc={h.final_server_acc:.3f};"
+                       f"client_acc={h.final_client_acc:.3f};cum_MB={mb:.2f}",
+        })
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Fig. 13/14/15: Enhanced-ERA sharpness beta ablation across
+non-IID strengths (server optimum drifts to beta=1 as alpha grows;
+beta~1.5 is a robust default).  Derived: final server/client acc grid."""
+from __future__ import annotations
+
+from benchmarks._common import default_cfg, emit
+from repro.fl.engine import run_method
+
+
+def run(rounds: int = 60):
+    rows = []
+    for alpha in (0.05, 0.3, 1.0):
+        for beta in (0.5, 1.0, 1.5, 2.0, 3.0):
+            cfg = default_cfg(alpha=alpha, rounds=rounds)
+            h = run_method("scarlet", cfg, cache_duration=25, beta=beta)
+            rows.append({
+                "name": f"fig13_alpha{alpha}_beta{beta}",
+                "us_per_call": 0.0,
+                "derived": f"server_acc={h.final_server_acc:.3f};"
+                           f"client_acc={h.final_client_acc:.3f}",
+            })
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

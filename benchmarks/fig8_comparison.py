@@ -1,0 +1,41 @@
+"""Paper Fig. 8 / Fig. 10: accuracy vs cumulative communication for
+SCARLET against DS-FL / CFD / COMET / Selective-FD / Individual.
+Derived: final server/client accuracy + cumulative MB."""
+from __future__ import annotations
+
+from benchmarks._common import default_cfg, emit
+from repro.fl.engine import run_method
+
+METHODS = [
+    ("scarlet", dict(cache_duration=10, beta=1.5)),
+    ("dsfl", dict(T=0.1)),
+    ("cfd", dict()),
+    ("comet", dict(n_clusters=2)),
+    ("selective_fd", dict(tau_client=0.0625)),
+    ("individual", dict()),
+]
+
+
+def run(rounds: int = 60, alpha: float = 0.05):
+    cfg = default_cfg(alpha=alpha, rounds=rounds)
+    rows = []
+    for name, kw in METHODS:
+        h = run_method(name, cfg, **kw)
+        s = h.ledger.summary()
+        rows.append({
+            "name": f"fig8_{name}_alpha{alpha}",
+            "us_per_call": 0.0,
+            "derived": f"server_acc={h.final_server_acc:.3f};"
+                       f"client_acc={h.final_client_acc:.3f};"
+                       f"cum_MB={s['cumulative_total']/1e6:.2f};"
+                       f"up_KB_rnd={s['uplink_mean']/1e3:.1f}",
+        })
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode on CPU — relative
+numbers only; native on TPU) vs jnp reference, on paper-scale shapes
+(|P^t|=1000 x N) and LM-vocab distillation shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._common import emit, timeit
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    rows = []
+    # Enhanced ERA on the paper's per-round shape
+    for B, N in ((1000, 10), (1000, 100)):
+        z = jax.random.dirichlet(KEY, jnp.ones(N), (B,))
+        f_ref = jax.jit(lambda z: ref.enhanced_era(z, 1.5))
+        rows.append({
+            "name": f"era_ref_B{B}_N{N}",
+            "us_per_call": timeit(lambda: f_ref(z).block_until_ready()),
+            "derived": "jnp oracle",
+        })
+        rows.append({
+            "name": f"era_pallas_B{B}_N{N}",
+            "us_per_call": timeit(lambda: ops.enhanced_era(z, 1.5).block_until_ready()),
+            "derived": "pallas interpret (native on TPU)",
+        })
+    # distillation loss at LM vocab
+    B, V = 64, 32_000
+    logits = jax.random.normal(KEY, (B, V))
+    teacher = jax.nn.softmax(jax.random.normal(KEY, (B, V)))
+    f_ref = jax.jit(lambda l, t: ref.distill_loss(l, t).mean())
+    rows.append({
+        "name": f"distill_ref_B{B}_V{V}",
+        "us_per_call": timeit(lambda: f_ref(logits, teacher).block_until_ready()),
+        "derived": "jnp oracle",
+    })
+    rows.append({
+        "name": f"distill_pallas_B{B}_V{V}",
+        "us_per_call": timeit(
+            lambda: ops.distill_loss(logits, teacher).block_until_ready(), n=3),
+        "derived": "pallas interpret (native on TPU)",
+    })
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Paper Fig. 11 as an example: SCARLET's soft-label cache as a drop-in
+module for OTHER distillation-based FL methods (CFD / COMET /
+Selective-FD), D=25.
+
+  PYTHONPATH=src python examples/caching_for_baselines.py
+"""
+from repro.fl.engine import FLConfig, run_method
+
+
+def main():
+    cfg = FLConfig(
+        n_clients=12, n_classes=10, dim=16, rounds=80,
+        public_size=1200, public_per_round=120, private_size=1500,
+        alpha=0.05, cluster_scale=2.0, noise=2.5, eval_every=20,
+    )
+    for method, kw in (("cfd", {}), ("comet", {"n_clusters": 2}),
+                       ("selective_fd", {"tau_client": 0.0625})):
+        base = run_method(method, cfg, **kw)
+        cached = run_method(method, cfg, use_cache=True, cache_duration=25, **kw)
+        b, c = base.ledger.summary(), cached.ledger.summary()
+        print(f"{method:14s} acc {base.final_server_acc:.3f} -> "
+              f"{cached.final_server_acc:.3f}   comm "
+              f"{b['cumulative_total']/1e6:6.2f} MB -> "
+              f"{c['cumulative_total']/1e6:6.2f} MB "
+              f"({1-c['cumulative_total']/b['cumulative_total']:.0%} saved)")
+
+
+if __name__ == "__main__":
+    main()

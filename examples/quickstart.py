@@ -1,0 +1,52 @@
+"""Quickstart: SCARLET in ~60 lines.
+
+Runs communication-efficient federated distillation (soft-label caching
++ Enhanced ERA) on a synthetic non-IID task with 8 clients, then prints
+accuracy + exact communication costs vs the DS-FL baseline.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import cache, era
+from repro.fl.engine import FLConfig, run_method
+
+
+def main():
+    cfg = FLConfig(
+        n_clients=8, n_classes=10, dim=16, rounds=40,
+        public_size=800, public_per_round=100, private_size=1000,
+        alpha=0.05,            # strong non-IID (Dirichlet)
+        cluster_scale=2.0, noise=2.5,
+        eval_every=10, seed=0,
+    )
+
+    # --- the two core primitives, standalone -------------------------------
+    z = jnp.asarray([[0.15, 0.10, 0.75], [0.4, 0.35, 0.25]])
+    print("Enhanced ERA (beta=2):", era.enhanced_era(z, 2.0))
+    c = cache.init_cache(public_size=800, num_classes=10)
+    miss = cache.miss_mask(c, jnp.arange(100), t=1, D=25)
+    print(f"cold cache: {int(miss.sum())}/100 soft-labels must be requested")
+
+    # --- full FL runs -------------------------------------------------------
+    print("\nSCARLET (cache D=25, Enhanced ERA beta=1.5):")
+    h = run_method("scarlet", cfg, cache_duration=25, beta=1.5)
+    s = h.ledger.summary()
+    print(f"  server acc={h.final_server_acc:.3f}  client acc={h.final_client_acc:.3f}")
+    print(f"  uplink {s['uplink_mean']/1e3:.1f} KB/round  "
+          f"downlink {s['downlink_mean']/1e3:.1f} KB/round  "
+          f"total {s['cumulative_total']/1e6:.2f} MB")
+
+    print("\nDS-FL baseline (ERA T=0.1, no cache):")
+    h2 = run_method("dsfl", cfg, T=0.1)
+    s2 = h2.ledger.summary()
+    print(f"  server acc={h2.final_server_acc:.3f}  client acc={h2.final_client_acc:.3f}")
+    print(f"  uplink {s2['uplink_mean']/1e3:.1f} KB/round  "
+          f"total {s2['cumulative_total']/1e6:.2f} MB")
+
+    saved = 1 - s["cumulative_total"] / s2["cumulative_total"]
+    print(f"\nSCARLET saves {saved:.0%} total communication at comparable accuracy.")
+
+
+if __name__ == "__main__":
+    main()

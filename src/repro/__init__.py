@@ -1,0 +1,5 @@
+"""repro: production-grade JAX reproduction of SCARLET (soft-label
+caching + Enhanced ERA for communication-efficient federated
+distillation), with a multi-architecture model zoo, multi-pod
+pjit/shard_map distribution and Pallas TPU kernels."""
+__version__ = "1.0.0"

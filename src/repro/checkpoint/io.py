@@ -1,0 +1,44 @@
+"""npz-based pytree checkpointing (keyed by tree paths, dtype-preserving)."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    for kp, leaf in flat:
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arrays["BF16::" + _key(kp)] = arr.view(np.uint16)
+        else:
+            arrays[_key(kp)] = arr
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for kp, leaf in flat:
+            k = _key(kp)
+            if "BF16::" + k in data:
+                arr = jnp.asarray(data["BF16::" + k].view(jnp.bfloat16))
+            else:
+                arr = jnp.asarray(data[k])
+            assert arr.shape == leaf.shape, (k, arr.shape, leaf.shape)
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, [l for (_, l) in zip(flat, leaves)])

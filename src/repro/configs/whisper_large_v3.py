@@ -1,0 +1,17 @@
+"""Whisper large-v3 — enc-dec audio; conv frontend STUBBED [arXiv:2212.04356]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="encdec",
+    source="[arXiv:2212.04356]",
+    n_layers=32,
+    n_encoder_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,
+    encoder_len=1500,
+)

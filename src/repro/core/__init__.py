@@ -1,0 +1,14 @@
+"""Core SCARLET library: aggregation (ERA / Enhanced ERA), synchronized
+soft-label caching, the cache-hit-rate simulator, distillation losses and
+communication accounting."""
+from repro.core import cache, cache_sim, comm, era, losses  # noqa: F401
+from repro.core.cache import (  # noqa: F401
+    CacheState,
+    CatchUpPackage,
+    init_cache,
+    miss_mask,
+    update_global_cache,
+    update_local_cache,
+)
+from repro.core.era import aggregate_soft_labels, enhanced_era, entropy  # noqa: F401
+from repro.core.losses import cross_entropy, kl_divergence, soft_cross_entropy  # noqa: F401

@@ -1,0 +1,226 @@
+"""Synchronized soft-label caching (SCARLET Alg. 1 + Alg. 2).
+
+Server keeps a *global cache* ``C_g[i] -> (z, t)`` over the public
+dataset; clients keep mirrored *local caches* ``C_k`` driven purely by
+per-round cache signals.  Implementation is functional and jit-safe:
+caches are dense arrays indexed by public-sample id.
+
+Semantics note (documented deviation): the paper's Alg. 1 computes
+``I_req = {i : C_g(i) does not exist}`` and expires entries only inside
+``UpdateGlobalCache``, which lets an expired entry be served stale once
+and makes the client FIFO queue under/overdraw (EXPIRED pops a queue that
+only holds labels for requested indices).  Appendix A's simulator
+(Alg. 3) instead checks expiry at *request* time: an index misses when it
+is absent **or** older than ``D``, and a miss refreshes the entry.  We
+adopt the Alg.-3 semantics everywhere — it is self-consistent between
+server and clients, matches the published cache-hit-rate simulation
+(Fig. 3), and preserves the communication model (only missed labels are
+transmitted, plus O(|P^t|) signals).
+
+Signals (2 bits/sample):
+  NEWLY_CACHED: index was absent; fresh label appended to the FIFO queue.
+  CACHED:       valid entry reused; no label transmitted.
+  EXPIRED:      entry was present but stale; fresh label in the queue
+                replaces it (client deletes then re-caches).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEWLY_CACHED = jnp.int32(0)
+CACHED = jnp.int32(1)
+EXPIRED = jnp.int32(2)
+
+_NEVER = jnp.int32(-(2**30))
+
+
+class CacheState(NamedTuple):
+    """Dense soft-label cache over the public dataset.
+
+    values:  (|P|, N) float32 — cached soft-labels.
+    ts:      (|P|,)   int32   — round at which the entry was cached.
+    present: (|P|,)   bool    — whether the entry exists.
+    """
+
+    values: jnp.ndarray
+    ts: jnp.ndarray
+    present: jnp.ndarray
+
+    @property
+    def size(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def num_classes(self) -> int:
+        return self.values.shape[1]
+
+
+def init_cache(public_size: int, num_classes: int, dtype=jnp.float32) -> CacheState:
+    return CacheState(
+        values=jnp.zeros((public_size, num_classes), dtype=dtype),
+        ts=jnp.full((public_size,), _NEVER, dtype=jnp.int32),
+        present=jnp.zeros((public_size,), dtype=bool),
+    )
+
+
+def miss_mask(cache: CacheState, idx: jnp.ndarray, t: int | jnp.ndarray, D: int,
+              *, probabilistic: bool = False,
+              key: jnp.ndarray | None = None) -> jnp.ndarray:
+    """True where a request must be issued (absent or expired); Alg. 3 test.
+
+    ``D == 0`` disables caching entirely (every sample misses), matching
+    the paper's D=0 baseline.
+
+    ``probabilistic=True`` implements the paper's §V future direction —
+    per-sample stochastic expiry with hazard ``age/D`` clipped to [0,1]
+    (expected lifetime comparable to the hard cutoff, but refreshes
+    de-synchronize across samples, eliminating the mass-refresh waves
+    that destabilize training at large D; see benchmarks/ext_prob_expiry).
+    """
+    present = cache.present[idx]
+    age = t - cache.ts[idx]
+    if isinstance(D, int) and D == 0:
+        return jnp.ones(idx.shape, dtype=bool)
+    if probabilistic:
+        if key is None:
+            raise ValueError("probabilistic expiry needs a PRNG key")
+        hazard = jnp.clip((age.astype(jnp.float32) - 1.0) / D, 0.0, 1.0)
+        expire = jax.random.uniform(key, idx.shape) < hazard
+        fresh = jnp.logical_and(present, jnp.logical_not(expire))
+    else:
+        fresh = jnp.logical_and(present, age <= D)
+    return jnp.logical_not(fresh)
+
+
+def request_list(cache: CacheState, idx: jnp.ndarray, t, D: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(miss_mask, I_req) for round t.  ``I_req`` is idx[miss] (dynamic
+    size — only used outside jit; jitted paths consume the mask)."""
+    m = miss_mask(cache, idx, t, D)
+    return m, idx[m]
+
+
+def signals_for_round(cache: CacheState, idx: jnp.ndarray, miss: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample signal gamma^t for the selected indices."""
+    present = cache.present[idx]
+    return jnp.where(
+        miss,
+        jnp.where(present, EXPIRED, NEWLY_CACHED),
+        CACHED,
+    )
+
+
+def assemble_teacher(
+    cache: CacheState,
+    idx: jnp.ndarray,
+    fresh: jnp.ndarray,
+    miss: jnp.ndarray,
+) -> jnp.ndarray:
+    """Assemble the full teacher set z-hat^t for idx.
+
+    ``fresh`` is (len(idx), N): the freshly aggregated soft-labels laid
+    out at the *positions of idx* (entries at non-miss positions are
+    ignored).  This dense layout keeps everything jittable; the FIFO
+    queue of the paper corresponds to ``fresh[miss]`` in idx order.
+    """
+    cached_vals = cache.values[idx]
+    return jnp.where(miss[:, None], fresh, cached_vals)
+
+
+def update_global_cache(
+    cache: CacheState,
+    idx: jnp.ndarray,
+    teacher: jnp.ndarray,
+    miss: jnp.ndarray,
+    t,
+) -> Tuple[CacheState, jnp.ndarray]:
+    """UpdateGlobalCache (Alg. 2, with Alg.-3 expiry): store fresh
+    entries for missed indices, return signals."""
+    sig = signals_for_round(cache, idx, miss)
+    values = cache.values.at[idx].set(
+        jnp.where(miss[:, None], teacher, cache.values[idx])
+    )
+    ts = cache.ts.at[idx].set(jnp.where(miss, jnp.int32(t), cache.ts[idx]))
+    present = cache.present.at[idx].set(jnp.logical_or(miss, cache.present[idx]))
+    return CacheState(values, ts, present), sig
+
+
+def update_local_cache(
+    cache_k: CacheState,
+    idx: jnp.ndarray,
+    signals: jnp.ndarray,
+    z_req_dense: jnp.ndarray,
+    t,
+) -> Tuple[CacheState, jnp.ndarray]:
+    """UpdateLocalCache (Alg. 2): reconstruct teacher from signals +
+    local cache + the broadcast queue, and sync the local cache.
+
+    ``z_req_dense`` is (len(idx), N) with fresh labels at miss positions
+    (the dense form of the FIFO queue; see ``pack_queue``/``unpack_queue``
+    for the wire format used by comm accounting).
+    Returns (new_cache, teacher).
+    """
+    is_miss = signals != CACHED
+    teacher = jnp.where(is_miss[:, None], z_req_dense, cache_k.values[idx])
+    values = cache_k.values.at[idx].set(teacher)
+    ts = cache_k.ts.at[idx].set(jnp.where(is_miss, jnp.int32(t), cache_k.ts[idx]))
+    present = cache_k.present.at[idx].set(True)
+    return CacheState(values, ts, present), teacher
+
+
+def pack_queue(z_dense: jnp.ndarray, miss: jnp.ndarray) -> jnp.ndarray:
+    """Wire format: the FIFO queue actually transmitted = fresh labels at
+    miss positions, in idx order (dynamic size; host-side only)."""
+    return z_dense[miss]
+
+
+def unpack_queue(queue: jnp.ndarray, miss: jnp.ndarray, num_classes: int) -> jnp.ndarray:
+    """Inverse of ``pack_queue``: scatter queue entries back to a dense
+    (len(idx), N) array (zeros at cached positions)."""
+    n = miss.shape[0]
+    out = jnp.zeros((n, num_classes), dtype=queue.dtype)
+    pos = jnp.cumsum(miss) - 1  # queue position for each miss
+    safe_pos = jnp.clip(pos, 0, max(queue.shape[0] - 1, 0))
+    gathered = queue[safe_pos] if queue.shape[0] > 0 else jnp.zeros((n, num_classes), queue.dtype)
+    return jnp.where(miss[:, None], gathered, out)
+
+
+# ---------------------------------------------------------------------------
+# Partial participation: catch-up packages (Section III-D).
+# ---------------------------------------------------------------------------
+
+class CatchUpPackage(NamedTuple):
+    """Differential cache sync for a client that skipped rounds.
+
+    The server sends, for every public index whose global-cache entry is
+    newer than the client's last-synced round, the cached value and its
+    timestamp.  After applying it the client is bit-identical to a client
+    that participated every round (given Alg.-3 semantics, the global
+    cache state fully determines local caches).
+    """
+
+    idx: jnp.ndarray     # (M,) indices to overwrite
+    values: jnp.ndarray  # (M, N)
+    ts: jnp.ndarray      # (M,)
+
+
+def make_catch_up(cache_g: CacheState, last_sync: int) -> CatchUpPackage:
+    """Entries cached strictly after ``last_sync`` (host-side, dynamic)."""
+    newer = jnp.logical_and(cache_g.present, cache_g.ts > last_sync)
+    idx = jnp.nonzero(newer)[0]
+    return CatchUpPackage(idx=idx, values=cache_g.values[idx], ts=cache_g.ts[idx])
+
+
+def apply_catch_up(cache_k: CacheState, pkg: CatchUpPackage) -> CacheState:
+    values = cache_k.values.at[pkg.idx].set(pkg.values)
+    ts = cache_k.ts.at[pkg.idx].set(pkg.ts)
+    present = cache_k.present.at[pkg.idx].set(True)
+    return CacheState(values, ts, present)
+
+
+def catch_up_bytes(pkg: CatchUpPackage, bytes_per_value: float = 4.0) -> float:
+    """Downlink cost of a catch-up package (values + indices + ts)."""
+    m, n = pkg.values.shape
+    return m * n * bytes_per_value + m * 4 + m * 4

@@ -1,0 +1,113 @@
+"""Communication-cost accounting (paper §IV-A4, Table V, Figs. 8-11).
+
+Counts every byte exchanged between server and clients: soft-labels,
+request lists, cache signals, catch-up packages, quantized payloads
+(CFD), cluster assignments (COMET), and — for parameter-sharing
+baselines (FedAvg) — model parameters.  The one-time public-dataset
+distribution is excluded, as in the paper.
+
+All quantities are analytic functions of what the algorithms actually
+transmit; the FL engine calls ``RoundCost`` hooks each round and the
+ledger accumulates uplink/downlink separately (asymmetric-bandwidth
+analysis, Table V).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+BYTES_F32 = 4.0
+BYTES_INDEX = 4.0
+BYTES_SIGNAL = 0.25  # 2 bits/sample, packed
+
+
+@dataclass
+class RoundCost:
+    uplink: float = 0.0    # client -> server, summed over clients, bytes
+    downlink: float = 0.0  # server -> client, summed over clients, bytes
+
+    def __add__(self, other: "RoundCost") -> "RoundCost":
+        return RoundCost(self.uplink + other.uplink, self.downlink + other.downlink)
+
+    @property
+    def total(self) -> float:
+        return self.uplink + self.downlink
+
+
+@dataclass
+class CommLedger:
+    """Per-round uplink/downlink byte ledger."""
+
+    rounds: List[RoundCost] = field(default_factory=list)
+
+    def record(self, cost: RoundCost) -> None:
+        self.rounds.append(cost)
+
+    @property
+    def cumulative_uplink(self) -> float:
+        return sum(r.uplink for r in self.rounds)
+
+    @property
+    def cumulative_downlink(self) -> float:
+        return sum(r.downlink for r in self.rounds)
+
+    @property
+    def cumulative_total(self) -> float:
+        return self.cumulative_uplink + self.cumulative_downlink
+
+    def summary(self) -> Dict[str, float]:
+        import numpy as np
+
+        up = np.array([r.uplink for r in self.rounds]) if self.rounds else np.zeros(1)
+        down = np.array([r.downlink for r in self.rounds]) if self.rounds else np.zeros(1)
+        return {
+            "rounds": float(len(self.rounds)),
+            "uplink_mean": float(up.mean()),
+            "uplink_std": float(up.std()),
+            "uplink_max": float(up.max()),
+            "downlink_mean": float(down.mean()),
+            "downlink_std": float(down.std()),
+            "downlink_max": float(down.max()),
+            "cumulative_total": float(up.sum() + down.sum()),
+        }
+
+
+def soft_label_bytes(n_samples: int, n_classes: int, bits: float = 32.0) -> float:
+    return n_samples * n_classes * bits / 8.0
+
+
+def distillation_round_cost(
+    *,
+    n_clients: int,
+    n_selected: int,
+    n_requested: int,
+    n_classes: int,
+    uplink_bits: float = 32.0,
+    downlink_bits: float = 32.0,
+    with_cache_signals: bool = False,
+    with_request_list: bool = True,
+    catch_up_down: float = 0.0,
+) -> RoundCost:
+    """Generic per-round cost for distillation-based FL.
+
+    - uplink: each client sends soft-labels for the ``n_requested``
+      samples (``n_selected`` when no cache).
+    - downlink: server broadcasts aggregated soft-labels for
+      ``n_requested`` samples (+ signals over all ``n_selected`` when
+      caching) + the request list, to each client.
+    """
+    up_per_client = soft_label_bytes(n_requested, n_classes, uplink_bits)
+    down_per_client = soft_label_bytes(n_requested, n_classes, downlink_bits)
+    if with_request_list:
+        down_per_client += n_requested * BYTES_INDEX + n_selected * BYTES_INDEX
+    if with_cache_signals:
+        down_per_client += n_selected * BYTES_SIGNAL
+    return RoundCost(
+        uplink=n_clients * up_per_client,
+        downlink=n_clients * down_per_client + catch_up_down,
+    )
+
+
+def fedavg_round_cost(*, n_clients: int, n_params: int, bits: float = 32.0) -> RoundCost:
+    per = n_params * bits / 8.0
+    return RoundCost(uplink=n_clients * per, downlink=n_clients * per)

@@ -1,0 +1,112 @@
+"""Aggregation mechanisms: ERA (DS-FL) and Enhanced ERA (SCARLET, Eq. 4).
+
+Soft-labels are normalized probability vectors over ``N`` classes.  The
+server averages the per-client soft-labels and then *sharpens* them:
+
+- ERA (Itahara et al., DS-FL):      ``softmax(z_mean / T)``
+- Enhanced ERA (this paper, Eq. 4): ``z_mean**beta / sum_j z_mean_j**beta``
+
+``beta = 1`` is an exact identity (plain federated averaging of
+soft-labels); ``beta > 1`` monotonically sharpens (majorization,
+Appendix B); ``beta < 1`` smooths.
+
+All functions are pure jnp and jit-safe.  ``enhanced_era`` can dispatch
+to the fused Pallas TPU kernel via ``impl="pallas"`` (interpret mode on
+CPU); the default pure-jnp path is the reference oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def softmax_with_temperature(logits: jnp.ndarray, T: float, axis: int = -1) -> jnp.ndarray:
+    """Temperature softmax; ``T -> 0`` approaches one-hot argmax."""
+    return jax.nn.softmax(logits / T, axis=axis)
+
+
+def era(z_mean: jnp.ndarray, T: float, axis: int = -1) -> jnp.ndarray:
+    """Conventional Entropy Reduction Aggregation (DS-FL, Eq. 2).
+
+    Applies a temperature softmax to *already-normalized* averaged
+    soft-labels.  Note the well-known instability: the output log-ratio
+    is ``(z_i - z_j)/T`` — scale (entropy) dependent, and the
+    sensitivity w.r.t. T explodes as ``1/T^2`` (Appendix C).
+    """
+    return softmax_with_temperature(z_mean, T, axis=axis)
+
+
+def enhanced_era(
+    z_mean: jnp.ndarray,
+    beta: float | jnp.ndarray,
+    axis: int = -1,
+    eps: float = _EPS,
+    impl: str = "jnp",
+) -> jnp.ndarray:
+    """Enhanced ERA (SCARLET, Eq. 4): ``z^beta / sum z^beta``.
+
+    Computed as ``exp(beta * log z)`` with clamping so zero entries stay
+    (numerically) zero for ``beta > 0``.  The output log-ratio between
+    two classes is ``beta * ln(z_i / z_j)`` — scale-invariant and linear
+    in ``beta`` (Appendix C), which is the paper's stability argument.
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as _kops
+
+        if axis not in (-1, z_mean.ndim - 1):
+            raise ValueError("pallas impl requires last-axis classes")
+        return _kops.enhanced_era(z_mean, beta)
+    z = jnp.clip(z_mean, eps, None)
+    # log-space for numerical stability with large beta / tiny probs.
+    logits = beta * jnp.log(z)
+    out = jax.nn.softmax(logits, axis=axis)
+    return out
+
+
+def aggregate_soft_labels(
+    z_clients: jnp.ndarray,
+    method: str = "enhanced_era",
+    *,
+    beta: float = 1.0,
+    T: float = 0.1,
+    weights: Optional[jnp.ndarray] = None,
+    impl: str = "jnp",
+) -> jnp.ndarray:
+    """Aggregate per-client soft-labels ``(K, B, N) -> (B, N)``.
+
+    ``weights`` optionally weights clients (e.g. by dataset size);
+    defaults to a uniform mean as in the paper.
+    """
+    if z_clients.ndim < 2:
+        raise ValueError("expected (K, ..., N)")
+    if weights is None:
+        z_mean = jnp.mean(z_clients, axis=0)
+    else:
+        w = weights / jnp.sum(weights)
+        z_mean = jnp.tensordot(w, z_clients, axes=(0, 0))
+    if method == "mean":
+        return z_mean
+    if method == "era":
+        return era(z_mean, T)
+    if method == "enhanced_era":
+        return enhanced_era(z_mean, beta, impl=impl)
+    raise ValueError(f"unknown aggregation method: {method}")
+
+
+def entropy(p: jnp.ndarray, axis: int = -1, eps: float = _EPS) -> jnp.ndarray:
+    """Shannon entropy (nats) of probability vectors."""
+    p = jnp.clip(p, eps, 1.0)
+    return -jnp.sum(p * jnp.log(p), axis=axis)
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def log_prob_ratio(p: jnp.ndarray, i: int, j: int, axis: int = -1) -> jnp.ndarray:
+    """``ln(p_i / p_j)`` — the Appendix-C stability diagnostic."""
+    pi = jnp.take(p, i, axis=axis)
+    pj = jnp.take(p, j, axis=axis)
+    return jnp.log(jnp.clip(pi, _EPS)) - jnp.log(jnp.clip(pj, _EPS))

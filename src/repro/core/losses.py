@@ -1,0 +1,46 @@
+"""Losses: hard-label CE and soft-target distillation (KL / soft CE).
+
+The distillation loss is the per-step hot spot of distillation-based FL
+(client + server distill every round over |P^t| x N).  ``impl="pallas"``
+dispatches to the fused flash-softmax Pallas kernel for large class
+counts (LM vocabs); the jnp path is the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Mean CE over integer labels; ignores entries where label < 0."""
+    logp = jax.nn.log_softmax(logits, axis=axis)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=axis)[..., 0]
+    nll = jnp.where(mask, nll, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def soft_cross_entropy(
+    logits: jnp.ndarray, teacher: jnp.ndarray, impl: str = "jnp"
+) -> jnp.ndarray:
+    """Mean ``-sum_j teacher_j * log_softmax(logits)_j`` (soft-target CE).
+
+    Equal to ``KL(teacher || student) + H(teacher)`` — same gradients as
+    the KL distillation loss used in the paper (phi_dist).
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as _kops
+
+        return _kops.distill_loss(logits, teacher)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(teacher * logp, axis=-1))
+
+
+def kl_divergence(teacher: jnp.ndarray, logits: jnp.ndarray) -> jnp.ndarray:
+    """Mean ``KL(teacher || softmax(logits))`` (paper's phi_dist)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    t = jnp.clip(teacher, _EPS, 1.0)
+    return jnp.mean(jnp.sum(t * (jnp.log(t) - logp), axis=-1))

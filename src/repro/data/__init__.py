@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    dirichlet_partition,
+    make_classification_data,
+    make_public_private,
+)

@@ -1,0 +1,1 @@
+from repro.fl.engine import FLConfig, FederatedDistillation, History, run_method  # noqa: F401

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot spots:
+
+- era_kernel:     fused Enhanced-ERA aggregation sharpening (VPU-bound)
+- distill_kernel: soft-target CE over large (LM-vocab) class dims
+                  (flash-softmax block accumulation)
+- attn_kernel:    causal GQA flash attention for client forward passes
+
+ops.py = jit'd wrappers (interpret mode on CPU); ref.py = jnp oracles.
+"""

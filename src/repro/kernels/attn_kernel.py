@@ -1,0 +1,171 @@
+"""Pallas TPU flash attention (causal, GQA, optional sliding window).
+
+Client forward passes dominate distillation-based FL compute when the
+clients are LMs (every round runs inference over the public subset plus
+local training).  This kernel is the TPU execution path for the model
+zoo's attention: online-softmax over KV blocks with running (m, l, acc)
+accumulators in VMEM scratch, (block_q x d) x (block_k x d) MXU matmuls.
+
+Grid = (batch, q_heads, q_blocks, k_blocks), k minor (sequential).  GQA
+maps query head h to KV head h // (H // Hkv) in the BlockSpec index_map
+— KV is never materialized per-query-head (HBM traffic stays at Hkv).
+Hardware alignment: block_q/block_k multiples of 8 and 128 lanes via d.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, nk: int, block_q: int, block_k: int, causal: bool,
+                  window: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+
+    q_idx = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_idx = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask &= k_idx <= q_idx
+    if window:
+        mask &= k_idx > q_idx - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,   # (B, Sq, H, d)
+    k: jnp.ndarray,   # (B, Sk, Hkv, d)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, Sq, H, d = q.shape
+    _, Sk, Hkv, _ = k.shape
+    rep = H // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    # (B, H, S, d) layout for clean 2D tiles
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, nk=nk, block_q=block_q,
+                          block_k=block_k, causal=causal, window=window,
+                          scale=scale),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: flash forward + recompute-style backward.
+# The forward never materializes the S x S probabilities in HBM; the
+# backward recomputes them blockwise from (q, k, v, o, delta) — the
+# standard flash-attention VJP contract.  On CPU the backward runs the
+# jnp reference formulation (exact same math; the Pallas backward kernel
+# is a TPU-phase optimization and the recompute keeps memory O(S·d)).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_diff(q, k, v, causal=True, window=0,
+                         block_q=128, block_k=128, interpret=True):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)
+
+
+def _flash_fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        block_q=block_q, block_k=block_k, interpret=interpret)
+    return o, (q, k, v)
+
+
+def _flash_bwd(causal, window, block_q, block_k, interpret, res, do):
+    q, k, v = res
+    B, Sq, H, d = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    f32 = jnp.float32
+    kr = jnp.repeat(k, rep, axis=2).astype(f32)
+    vr = jnp.repeat(v, rep, axis=2).astype(f32)
+    qf = q.astype(f32)
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kr) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    dof = do.astype(f32)
+    dv_r = jnp.einsum("bhqk,bqhd->bkhd", p, dof)
+    dp = jnp.einsum("bqhd,bkhd->bhqk", dof, vr)
+    delta = jnp.sum(p * dp, axis=-1, keepdims=True)
+    ds = p * (dp - delta) * scale
+    dq = jnp.einsum("bhqk,bkhd->bqhd", ds, kr)
+    dk_r = jnp.einsum("bhqk,bqhd->bkhd", ds, qf)
+    # fold repeated-KV grads back onto the Hkv heads
+    dk = dk_r.reshape(B, k.shape[1], Hkv, rep, d).sum(axis=3)
+    dv = dv_r.reshape(B, k.shape[1], Hkv, rep, d).sum(axis=3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_diff.defvjp(_flash_fwd, _flash_bwd)

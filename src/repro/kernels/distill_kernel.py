@@ -1,0 +1,89 @@
+"""Pallas TPU kernel for the distillation loss (soft-target cross
+entropy) over LARGE class dims.
+
+Per row: ``loss = logsumexp(l) * sum(t) - sum(t * l)``.  The assigned LM
+vocabs (163 840 / 200 064 / 256 000) do not fit one VMEM tile, so the
+kernel runs a flash-softmax style ONE-pass over vocab blocks with
+running-max / rescaled-sum accumulators in VMEM scratch, accumulating
+``sum(t*l)`` and ``sum(t)`` in the same sweep.  Grid = (row blocks,
+vocab blocks) with the vocab dim minor => sequential accumulation per
+row block on TPU.
+
+This is the TPU adaptation of the paper's distillation step: on GPU one
+would fuse softmax+CE per threadblock; on TPU the constraint is VMEM
+tiling and (8,128) register lanes, hence the block-accumulator design.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _distill_kernel(l_ref, t_ref, o_ref, m_ref, s_ref, dot_ref, tsum_ref, *, nv: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        dot_ref[...] = jnp.zeros_like(dot_ref)
+        tsum_ref[...] = jnp.zeros_like(tsum_ref)
+
+    l = l_ref[...].astype(jnp.float32)   # (bb, bv)
+    t = t_ref[...].astype(jnp.float32)
+
+    m_prev = m_ref[...]
+    m_blk = jnp.max(l, axis=-1)
+    m_new = jnp.maximum(m_prev, m_blk)
+    scale = jnp.exp(m_prev - m_new)
+    s_ref[...] = s_ref[...] * scale + jnp.sum(jnp.exp(l - m_new[:, None]), axis=-1)
+    m_ref[...] = m_new
+    dot_ref[...] += jnp.sum(t * l, axis=-1)
+    tsum_ref[...] += jnp.sum(t, axis=-1)
+
+    @pl.when(j == nv - 1)
+    def _fin():
+        lse = m_ref[...] + jnp.log(s_ref[...])
+        o_ref[...] = (lse * tsum_ref[...] - dot_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_v", "interpret"))
+def distill_loss(logits: jnp.ndarray, teacher: jnp.ndarray,
+                 block_b: int = 128, block_v: int = 2048,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Row-wise soft-target CE. logits/teacher: (B, V) -> (B,).
+
+    Padding: vocab pad gets logits=-1e30 (excluded from logsumexp) and
+    teacher=0 (no dot contribution); row pad is sliced off.
+    """
+    B, V = logits.shape
+    b_pad = (-B) % block_b
+    v_pad = (-V) % block_v
+    l = jnp.pad(logits, ((0, b_pad), (0, v_pad)), constant_values=_NEG)
+    t = jnp.pad(teacher, ((0, b_pad), (0, v_pad)))
+    Bp, Vp = l.shape
+    nb, nv = Bp // block_b, Vp // block_v
+    out = pl.pallas_call(
+        functools.partial(_distill_kernel, nv=nv),
+        grid=(nb, nv),
+        in_specs=[
+            pl.BlockSpec((block_b, block_v), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, block_v), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(l, t)
+    return out[:B]

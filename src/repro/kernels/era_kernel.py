@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for Enhanced ERA (SCARLET Eq. 4).
+
+The aggregation sharpening is the server's per-round hot loop:
+``|P^t| x N`` soft-labels pass through ``z^beta / sum(z^beta)``.  A naive
+jnp chain (clip -> log -> mul -> exp -> sum -> div) makes 3 HBM round
+trips; this kernel fuses everything in one VMEM pass per row block (VPU
+transcendental-bound), including the optional mean over the K client
+axis so the (K, B, N) stack is reduced on the fly.
+
+Tiling: rows are blocked by ``block_b`` (8-aligned); the class dim N is
+kept whole per tile (FL class counts are <= a few thousand; padded to a
+128-lane multiple by the wrapper).  Softmax-style max-subtraction in
+log-space keeps large beta stable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+
+
+def _era_kernel(z_ref, beta_ref, o_ref):
+    z = z_ref[...].astype(jnp.float32)          # (bb, N)
+    beta = beta_ref[0]
+    logz = jnp.log(jnp.maximum(z, _EPS)) * beta  # (bb, N)
+    m = jnp.max(logz, axis=-1, keepdims=True)
+    e = jnp.exp(logz - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def _era_fused_kernel(z_ref, beta_ref, o_ref, *, k_clients: int):
+    z = z_ref[...].astype(jnp.float32)           # (K, bb, N)
+    zbar = jnp.sum(z, axis=0) / k_clients
+    beta = beta_ref[0]
+    logz = jnp.log(jnp.maximum(zbar, _EPS)) * beta
+    m = jnp.max(logz, axis=-1, keepdims=True)
+    e = jnp.exp(logz - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def enhanced_era(z_mean: jnp.ndarray, beta, block_b: int = 256,
+                 interpret: bool = True) -> jnp.ndarray:
+    """z_mean: (B, N) -> sharpened (B, N).  N padded to 128 lanes."""
+    B, N = z_mean.shape
+    n_pad = (-N) % 128
+    b_pad = (-B) % block_b
+    z = jnp.pad(z_mean, ((0, b_pad), (0, n_pad)))  # pad rows with zeros
+    # zero-padding the class dim is safe: log(eps)*beta underflows the pad
+    Bp, Np = z.shape
+    beta_arr = jnp.asarray([beta], jnp.float32)
+    out = pl.pallas_call(
+        _era_kernel,
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, Np), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY if False else None),  # scalar broadcast
+        ],
+        out_specs=pl.BlockSpec((block_b, Np), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), z_mean.dtype),
+        interpret=interpret,
+    )(z, beta_arr)
+    return out[:B, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def enhanced_era_fused(z_clients: jnp.ndarray, beta, block_b: int = 128,
+                       interpret: bool = True) -> jnp.ndarray:
+    """(K, B, N) client soft-labels -> aggregated + sharpened (B, N)."""
+    K, B, N = z_clients.shape
+    n_pad = (-N) % 128
+    b_pad = (-B) % block_b
+    z = jnp.pad(z_clients, ((0, 0), (0, b_pad), (0, n_pad)))
+    _, Bp, Np = z.shape
+    beta_arr = jnp.asarray([beta], jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_era_fused_kernel, k_clients=K),
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((K, block_b, Np), lambda i: (0, i, 0)),
+            pl.BlockSpec(memory_space=None),
+        ],
+        out_specs=pl.BlockSpec((block_b, Np), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), z_clients.dtype),
+        interpret=interpret,
+    )(z, beta_arr)
+    return out[:B, :N]

@@ -1,0 +1,48 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they run in
+``interpret=True`` mode, executing the kernel body in Python for
+correctness validation against ``ref.py``.  Higher layers call these
+entry points (``repro.core.era`` / ``repro.core.losses`` with
+``impl="pallas"``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attn_kernel, distill_kernel, era_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def enhanced_era(z_mean: jnp.ndarray, beta, block_b: int = 256) -> jnp.ndarray:
+    """(..., N) -> sharpened (..., N); leading dims flattened to rows."""
+    shape = z_mean.shape
+    flat = z_mean.reshape(-1, shape[-1])
+    out = era_kernel.enhanced_era(flat, beta, block_b=min(block_b, max(flat.shape[0], 8)),
+                                  interpret=_interpret())
+    return out.reshape(shape)
+
+
+def enhanced_era_fused(z_clients: jnp.ndarray, beta) -> jnp.ndarray:
+    """(K, B, N) -> (B, N): fused client-mean + sharpening."""
+    return era_kernel.enhanced_era_fused(z_clients, beta, interpret=_interpret())
+
+
+def distill_loss(logits: jnp.ndarray, teacher: jnp.ndarray) -> jnp.ndarray:
+    """Mean soft-target CE over all rows; supports (..., V) inputs."""
+    V = logits.shape[-1]
+    flat_l = logits.reshape(-1, V)
+    flat_t = teacher.reshape(-1, V)
+    per_row = distill_kernel.distill_loss(flat_l, flat_t, interpret=_interpret())
+    return jnp.mean(per_row)
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
+    return attn_kernel.flash_attention(q, k, v, causal=causal, window=window,
+                                       block_q=block_q, block_k=block_k,
+                                       interpret=_interpret())

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference
+against which interpret-mode kernel sweeps assert allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def enhanced_era(z_mean: jnp.ndarray, beta: float) -> jnp.ndarray:
+    """SCARLET Eq. 4 over the last axis: z^beta / sum z^beta."""
+    z = jnp.clip(z_mean.astype(jnp.float32), _EPS, None)
+    logits = beta * jnp.log(z)
+    return jax.nn.softmax(logits, axis=-1).astype(z_mean.dtype)
+
+
+def enhanced_era_fused(z_clients: jnp.ndarray, beta: float) -> jnp.ndarray:
+    """Fused mean-over-clients + sharpen: (K, B, N) -> (B, N)."""
+    return enhanced_era(jnp.mean(z_clients.astype(jnp.float32), axis=0), beta)
+
+
+def distill_loss(logits: jnp.ndarray, teacher: jnp.ndarray) -> jnp.ndarray:
+    """Per-row soft-target CE: -sum_j t_j log_softmax(l)_j -> (B,)."""
+    l32 = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(l32, axis=-1)
+    return -jnp.sum(teacher.astype(jnp.float32) * logp, axis=-1)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Naive attention oracle. q: (B,Sq,H,dh); k/v: (B,Sk,Hkv,dh)."""
+    B, Sq, H, dh = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(dh))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)

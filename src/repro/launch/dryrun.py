@@ -1,0 +1,374 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, print memory/cost analysis, extract roofline
+terms, and write one JSON artifact per combo.
+
+The two os.environ lines above MUST run before any other import (jax
+locks the device count on first init).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--scheme fsdp]
+"""
+
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES_BY_NAME, InputShape, ModelConfig
+from repro.configs.registry import ARCHS, ASSIGNED
+from repro.launch import roofline as rl
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models import common as cm
+from repro.models import registry
+from repro.optim import get as get_opt
+
+import contextlib
+import dataclasses
+
+
+@contextlib.contextmanager
+def scan_unroll(flag: bool):
+    """Fully unroll layer scans so cost/HLO analysis counts every layer
+    (while-loop bodies are otherwise counted ONCE)."""
+    prev = cm.SCAN_UNROLL
+    cm.SCAN_UNROLL = flag
+    try:
+        yield
+    finally:
+        cm.SCAN_UNROLL = prev
+
+
+def depth_of(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_layer_period
+    return cfg.n_layers
+
+
+def with_depth(cfg: ModelConfig, d: int) -> ModelConfig:
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg, n_layers=cfg.attn_layer_period * d)
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, n_layers=d, n_encoder_layers=d)
+    return dataclasses.replace(cfg, n_layers=d)
+
+# (arch, shape) combos skipped with reasons (see DESIGN.md §Arch-applicability)
+SKIPS: Dict[tuple, str] = {
+    (a, "long_500k"): "pure full-attention arch: 500k dense KV cache unsupported "
+                      "without sliding-window/block-sparse variant"
+    for a in ("kimi-k2-1t-a32b", "internvl2-26b", "grok-1-314b",
+              "granite-3-2b", "phi4-mini-3.8b", "granite-3-8b",
+              "whisper-large-v3")
+}
+
+
+# per-combo config overrides (documented deviations, DESIGN.md §4):
+# gemma2 long-context serving runs all layers in local (sliding-window)
+# mode — its global layers would otherwise need a dense 500k KV score.
+COMBO_OVERRIDES: Dict[tuple, Dict[str, Any]] = {
+    ("gemma2-27b", "long_500k"): {"local_global_alternating": False},
+}
+
+
+def _abstract_init(cfg: ModelConfig):
+    """Param ShapeDtypeStructs + logical axes without allocating anything."""
+    captured: Dict[str, Any] = {}
+
+    def f(key):
+        p, axes = registry.init(cfg, key)
+        captured["axes"] = axes
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, captured["axes"]
+
+
+def make_train_step(cfg: ModelConfig, opt):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: registry.loss_fn(cfg, p, batch, remat=True))(params)
+        params, opt_state = opt.update(grads, opt_state, params, 3e-4)
+        return loss, params, opt_state
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return registry.prefill(cfg, params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token, pos):
+        return registry.decode_step(cfg, params, cache, token, pos)
+
+    return serve_step
+
+
+def lower_one(cfg: ModelConfig, shape: InputShape, mesh, scheme: str,
+              optimizer: str = "adamw"):
+    """Returns (lowered, compiled, specs_meta)."""
+    params_shapes, axes = _abstract_init(cfg)
+    p_shard = sh.param_shardings(axes, params_shapes, mesh, scheme)
+    with mesh:
+        if shape.mode == "train":
+            opt = get_opt(optimizer, state_dtype="bfloat16") \
+                if optimizer == "adamw" else get_opt(optimizer)
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            o_shard = sh.opt_state_shardings(p_shard, opt_shapes, mesh)
+            batch_specs = input_specs(cfg, shape)
+            b_shard = {k: NamedSharding(mesh, sh.batch_spec(mesh))
+                       for k in batch_specs}
+            fn = jax.jit(
+                make_train_step(cfg, opt),
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(NamedSharding(mesh, P()), p_shard, o_shard),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(params_shapes, opt_shapes, batch_specs)
+        elif shape.mode == "prefill":
+            batch_specs = input_specs(cfg, shape)
+            b_shard = {k: NamedSharding(mesh, sh.batch_spec(mesh))
+                       for k in batch_specs}
+            fn = jax.jit(
+                make_prefill_step(cfg),
+                in_shardings=(p_shard, b_shard),
+                out_shardings=NamedSharding(mesh, sh.batch_spec(mesh)),
+            )
+            lowered = fn.lower(params_shapes, batch_specs)
+        else:  # decode
+            token_spec, pos_spec, cache_specs = input_specs(cfg, shape)
+            c_axes = registry.cache_axes(cfg, shape.name)
+            c_shard = sh.cache_shardings(c_axes, cache_specs, mesh)
+            tok_shard = NamedSharding(
+                mesh, sh.batch_spec(mesh) if shape.global_batch > 1 else P())
+            fn = jax.jit(
+                make_serve_step(cfg),
+                in_shardings=(p_shard, c_shard, tok_shard, NamedSharding(mesh, P())),
+                out_shardings=(tok_shard, c_shard),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(params_shapes, cache_specs, token_spec, pos_spec)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool, scheme: str,
+              out_dir: str = "experiments/artifacts", optimizer: str = "adamw",
+              verbose: bool = True, roofline: bool = True,
+              cfg_overrides: Dict[str, Any] | None = None,
+              variant: str = "", moe_a2a: bool = False) -> Dict[str, Any]:
+    cfg = ARCHS[arch]
+    combo_over = COMBO_OVERRIDES.get((arch, shape_name), {})
+    if combo_over:
+        cfg = dataclasses.replace(cfg, **combo_over)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "scheme": scheme,
+        "variant": variant, "cfg_overrides": dict(cfg_overrides or {}),
+    }
+    if (arch, shape_name) in SKIPS:
+        result["status"] = "skipped"
+        result["reason"] = SKIPS[(arch, shape_name)]
+        _write(result, out_dir)
+        if verbose:
+            print(f"[SKIP] {arch} x {shape_name}: {result['reason']}")
+        return result
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = int(np.prod(mesh.devices.shape))
+        if moe_a2a:
+            cm.MOE_A2A_MESH = mesh
+
+        # (a) FULL config, scanned: proves the combo lowers + compiles on
+        # the production mesh and yields the true per-device memory plan.
+        with scan_unroll(False):
+            _, compiled_full = lower_one(cfg, shape, mesh, scheme, optimizer)
+        mem = compiled_full.memory_analysis()
+        bytes_per_device = float(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0))
+
+        if not roofline:
+            # multi-pod pass: compile proof + memory plan only (the
+            # roofline table is single-pod per the experiment plan)
+            result["status"] = "ok"
+            result["compile_s"] = time.time() - t0
+            result["bytes_per_device"] = bytes_per_device
+            result["memory_analysis"] = {
+                k: float(getattr(mem, k, 0)) for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "alias_size_in_bytes")
+            }
+            if verbose:
+                print(f"[OK]   {arch} x {shape_name} ({mesh_name}, {scheme}) "
+                      f"compile={result['compile_s']:.1f}s "
+                      f"per-dev-mem={bytes_per_device/1e9:.2f}GB (compile-proof only)")
+            _write(result, out_dir)
+            return result
+
+        # (b) two UNROLLED depths: exact per-layer deltas for the
+        # linear-in-depth roofline quantities, extrapolated to full depth
+        # (layers are homogeneous; embed/head costs live in the base term).
+        # Hybrid blocks are 8 sublayers each -> use depths (1, 2).
+        depths = (1, 2) if cfg.family == "hybrid" else (2, 4)
+        metrics = {}
+        for d in depths:
+            with scan_unroll(True):
+                _, comp_d = lower_one(with_depth(cfg, d), shape, mesh,
+                                      scheme, optimizer)
+            cost_d = comp_d.cost_analysis()
+            if isinstance(cost_d, list):
+                cost_d = cost_d[0]
+            from repro.launch import hlo_analysis as ha
+            summ = ha.analyze(comp_d.as_text())
+            metrics[d] = {
+                "flops": summ.dot_flops,
+                "bytes": float(cost_d.get("bytes accessed",
+                                          cost_d.get("bytes_accessed", 0.0))),
+                "coll": summ.collective_bytes,
+                "coll_by_kind": summ.collective_by_kind,
+                "coll_counts": summ.collective_counts,
+                "whiles": summ.residual_while_loops,
+                "xla_flops": float(cost_d.get("flops", 0.0)),
+            }
+        D_full = depth_of(cfg)
+        d1, d2 = depths
+        span = float(d2 - d1)
+
+        def _extrap(key):
+            per_layer = (metrics[d2][key] - metrics[d1][key]) / span
+            return metrics[d1][key] + per_layer * (D_full - d1)
+
+        kinds = set(metrics[d1]["coll_by_kind"]) | set(metrics[d2]["coll_by_kind"])
+        coll_by_kind = {}
+        coll_counts = {}
+        for k in kinds:
+            a1 = metrics[d1]["coll_by_kind"].get(k, 0.0)
+            a2 = metrics[d2]["coll_by_kind"].get(k, 0.0)
+            coll_by_kind[k] = a1 + (a2 - a1) / span * (D_full - d1)
+            c1 = metrics[d1]["coll_counts"].get(k, 0)
+            c2 = metrics[d2]["coll_counts"].get(k, 0)
+            coll_counts[k] = int(round(c1 + (c2 - c1) / span * (D_full - d1)))
+
+        import repro.launch.hlo_analysis as _ha
+        summary = _ha.HloSummary(
+            dot_flops=_extrap("flops"),
+            transcendental_elems=0.0,
+            collective_bytes=_extrap("coll"),
+            collective_by_kind=coll_by_kind,
+            collective_counts=coll_counts,
+            residual_while_loops=max(metrics[d1]["whiles"], metrics[d2]["whiles"]),
+        )
+        roof = rl.compute_roofline_from_summary(
+            arch=arch, shape=shape_name, mesh_name=mesh_name, scheme=scheme,
+            chips=chips, summary=summary,
+            bytes_accessed=_extrap("bytes"),
+            xla_flops=_extrap("xla_flops"),
+            model_flops=rl.model_flops_for(cfg, shape),
+            bytes_per_device=bytes_per_device,
+        )
+        result.update(roof.as_dict())
+        result["status"] = "ok"
+        result["compile_s"] = time.time() - t0
+        result["memory_analysis"] = {
+            k: float(getattr(mem, k, 0)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes")
+        }
+        if verbose:
+            print(f"[OK]   {arch} x {shape_name} ({mesh_name}, {scheme}) "
+                  f"compile={result['compile_s']:.1f}s "
+                  f"flops/dev={roof.hlo_gflops_per_device:.1f}G "
+                  f"hbm/dev={roof.hlo_gbytes_per_device:.1f}G "
+                  f"coll/dev={roof.collective_gbytes_per_device:.3f}G "
+                  f"terms(c/m/n)={roof.compute_s*1e3:.2f}/{roof.memory_s*1e3:.2f}/"
+                  f"{roof.collective_s*1e3:.2f}ms bottleneck={roof.bottleneck} "
+                  f"useful={roof.useful_flops_ratio:.2f} "
+                  f"per-dev-mem={bytes_per_device/1e9:.2f}GB")
+            print(f"       memory_analysis: {result['memory_analysis']}")
+            print(f"       cost_analysis(xla): flops={roof.cost_analysis_gflops*1e9:.3e}; "
+                  f"whiles_left={roof.residual_while_loops}")
+    except Exception as e:  # noqa: BLE001 — a failed combo is a bug to record
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+        result["compile_s"] = time.time() - t0
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} ({mesh_name}, {scheme}): "
+                  f"{result['error']}")
+    finally:
+        cm.MOE_A2A_MESH = None
+    _write(result, out_dir)
+    return result
+
+
+def _write(result: Dict[str, Any], out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    fname = (f"{result['arch']}__{result['shape']}__{result['mesh']}"
+             f"__{result['scheme']}"
+             + (f"__{result['variant']}" if result.get("variant") else "")
+             + ".json")
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(result, f, indent=2, default=str)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ASSIGNED), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES_BY_NAME), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--scheme", choices=("tp", "fsdp"), default="fsdp")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--out", default="experiments/artifacts")
+    ap.add_argument("--no-roofline", action="store_true",
+                    help="compile-proof only (skip depth-2/4 roofline pass)")
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in SHAPES_BY_NAME:
+                combos.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        combos = [(args.arch, args.shape)]
+
+    failures = 0
+    for a, s in combos:
+        r = run_combo(a, s, args.multi_pod, args.scheme, args.out,
+                      args.optimizer, roofline=not args.no_roofline)
+        failures += r["status"] == "error"
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

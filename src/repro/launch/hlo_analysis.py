@@ -1,0 +1,230 @@
+"""HLO-text analysis for the dry-run roofline.
+
+XLA:CPU's ``cost_analysis()`` under-reports matmul FLOPs for this use
+case (dots live inside fusion computations / get custom-call'd depending
+on backend version), so we parse the post-SPMD optimized HLO text
+ourselves:
+
+- build a name -> shape table per computation,
+- accumulate dot FLOPs (2 * prod(output) * prod(contracted dims)),
+- accumulate collective bytes with the standard conventions
+  (all-reduce 2x input, all-gather = output, reduce-scatter = input,
+  all-to-all / collective-permute = size),
+- weight every computation by its call multiplicity from the ENTRY
+  call graph (fusions / calls / while bodies; the dry-run fully unrolls
+  layer scans so while-loop trip counts do not hide work — any residual
+  while body is counted once and flagged).
+
+All quantities are PER-DEVICE (the SPMD module is the per-device
+program); the roofline terms divide by per-chip peaks directly.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=)\s*(\{[^}]*\}|%[\w.\-]+)")
+_OPERAND_RE = re.compile(r"\((%[\w.\-]+(?:,\s*%[\w.\-]+)*)?\)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(dtype: str, dim_str: str) -> Tuple[int, float]:
+    n = 1
+    for d in dim_str.split(","):
+        if d:
+            n *= int(d)
+    return n, n * _DTYPE_BYTES.get(dtype, 0)
+
+
+@dataclass
+class _Instr:
+    name: str
+    out_bytes: float
+    out_elems: int
+    opcode: str
+    line: str
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class _Computation:
+    name: str
+    instrs: Dict[str, _Instr] = field(default_factory=dict)
+    called: List[str] = field(default_factory=list)  # per call site
+    dot_flops: float = 0.0
+    transcendental_elems: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    has_while: bool = False
+
+
+def _first_opcode(rhs: str) -> str:
+    # rhs like: "f32[8,16]{1,0} dot(%a, %b), ..."
+    m = re.match(r"\S+\s+([a-z0-9\-]+)", rhs)
+    return m.group(1) if m else ""
+
+
+def parse_hlo(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        # computation header: "%name (args) -> type {" or "ENTRY %name ..."
+        if (stripped.endswith("{") and ("(" in stripped)
+                and ("->" in stripped or stripped.startswith("ENTRY"))):
+            m = re.search(r"(%[\w.\-]+)", stripped)
+            header_name = m.group(1) if m else f"comp{len(comps)}"
+            cur = _Computation(name=header_name)
+            comps[header_name] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        dm = _DEF_RE.match(stripped)
+        if not dm:
+            continue
+        name, rhs = dm.groups()
+        opcode = _first_opcode(rhs)
+        shapes = _SHAPE_RE.findall(stripped)
+        out_elems, out_bytes = _shape_elems_bytes(*shapes[0]) if shapes else (0, 0.0)
+        ins = _Instr(name=name, out_bytes=out_bytes, out_elems=out_elems,
+                     opcode=opcode, line=stripped)
+        # operand names (first parenthesized group after opcode)
+        paren = stripped.split(opcode + "(", 1)
+        if len(paren) == 2:
+            args = paren[1].split(")", 1)[0]
+            ins.operands = re.findall(r"%[\w.\-]+", args)
+        cur.instrs[name] = ins
+        # called computations
+        for cm_ in _CALLED_RE.findall(stripped):
+            names = re.findall(r"%[\w.\-]+", cm_)
+            cur.called.extend(names)
+        if opcode == "while":
+            cur.has_while = True
+    return comps
+
+
+def _analyze_comp(comp: _Computation) -> None:
+    """Fill per-computation dot flops + collective bytes (own instrs)."""
+    for ins in comp.instrs.values():
+        if ins.opcode == "dot":
+            m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+            cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+            shapes = _SHAPE_RE.findall(ins.line)
+            out_elems = 1
+            for d in shapes[0][1].split(","):
+                if d:
+                    out_elems *= int(d)
+            # lhs shape: look up operand 0 in same computation; fall back
+            # to inline shapes if present
+            contracted = 1
+            lhs_dims: List[int] = []
+            if ins.operands:
+                op0 = comp.instrs.get(ins.operands[0])
+                if op0 is not None:
+                    lm = _SHAPE_RE.findall(op0.line)
+                    if lm:
+                        lhs_dims = [int(x) for x in lm[0][1].split(",") if x]
+            if not lhs_dims and len(shapes) >= 2:
+                lhs_dims = [int(x) for x in shapes[1][1].split(",") if x]
+            for i in cdims:
+                if i < len(lhs_dims):
+                    contracted *= lhs_dims[i]
+            comp.dot_flops += 2.0 * out_elems * contracted
+        elif ins.opcode in ("exponential", "tanh", "log", "rsqrt", "power",
+                            "logistic", "sine", "cosine"):
+            comp.transcendental_elems += ins.out_elems
+        else:
+            for kind in _COLLECTIVES:
+                if ins.opcode == kind or ins.opcode == kind + "-start":
+                    # bytes convention per participant
+                    in_bytes = 0.0
+                    if ins.operands:
+                        op0 = comp.instrs.get(ins.operands[0])
+                        if op0 is not None:
+                            in_bytes = op0.out_bytes
+                    out_bytes = ins.out_bytes
+                    if kind == "all-reduce":
+                        b = 2.0 * max(in_bytes, out_bytes)
+                    elif kind == "all-gather":
+                        b = out_bytes
+                    elif kind == "reduce-scatter":
+                        b = max(in_bytes, out_bytes)
+                    else:
+                        b = max(in_bytes, out_bytes)
+                    comp.coll_bytes[kind] += b
+                    comp.coll_counts[kind] += 1
+                    break
+
+
+@dataclass
+class HloSummary:
+    dot_flops: float                 # per-device
+    transcendental_elems: float
+    collective_bytes: float          # per-device
+    collective_by_kind: Dict[str, float]
+    collective_counts: Dict[str, int]
+    residual_while_loops: int        # >0 => some work hidden in loops
+
+
+def analyze(text: str) -> HloSummary:
+    comps = parse_hlo(text)
+    for c in comps.values():
+        _analyze_comp(c)
+    # call multiplicities from the entry computation
+    entry = None
+    for name, c in comps.items():
+        if "entry" in name.lower() or name.lower().startswith("%main"):
+            entry = name
+    if entry is None:  # fall back: computation never called by others
+        called_sets = {n for c in comps.values() for n in c.called}
+        roots = [n for n in comps if n not in called_sets]
+        entry = roots[0] if roots else next(iter(comps))
+    mult: Dict[str, float] = defaultdict(float)
+
+    def walk(name: str, m: float, depth=0):
+        if name not in comps or depth > 64:
+            return
+        mult[name] += m
+        counts: Dict[str, int] = defaultdict(int)
+        for cal in comps[name].called:
+            counts[cal] += 1
+        for cal, k in counts.items():
+            walk(cal, m * k, depth + 1)
+
+    walk(entry, 1.0)
+    flops = sum(c.dot_flops * mult[c.name] for c in comps.values())
+    trans = sum(c.transcendental_elems * mult[c.name] for c in comps.values())
+    by_kind: Dict[str, float] = defaultdict(float)
+    counts_total: Dict[str, int] = defaultdict(int)
+    for c in comps.values():
+        for k, v in c.coll_bytes.items():
+            by_kind[k] += v * mult[c.name]
+        for k, v in c.coll_counts.items():
+            counts_total[k] += int(v * max(mult[c.name], 1))
+    n_while = sum(1 for c in comps.values() if c.has_while and mult[c.name] > 0)
+    return HloSummary(
+        dot_flops=flops,
+        transcendental_elems=trans,
+        collective_bytes=sum(by_kind.values()),
+        collective_by_kind=dict(by_kind),
+        collective_counts=dict(counts_total),
+        residual_while_loops=n_while,
+    )

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing never
+touches jax device state.  The production pod is 16x16 = 256 chips
+(TPU v5e); multi-pod doubles it with a leading "pod" axis (2x16x16 =
+512 chips) carrying pure data parallelism across the DCN/ICI boundary.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 4) -> jax.sharding.Mesh:
+    """Small mesh for CI-scale sharding tests (requires
+    xla_force_host_platform_device_count >= data*model)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh: jax.sharding.Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

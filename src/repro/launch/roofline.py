@@ -1,0 +1,196 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory term     = HLO_bytes / (chips * HBM_BW)
+  collective term = collective_bytes / (chips * LINK_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-
+program, all chips).  collective_bytes is parsed from the (post-SPMD)
+HLO text: we sum the max inline shape per all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction (the max of
+output/operand shapes printed on the line = bytes a participant moves).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+from typing import Dict, List, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    if dtype not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float], Dict[str, int]]:
+    """Sum of per-instruction max inline shape over collective ops.
+
+    Returns (total_bytes, bytes_by_kind, count_by_kind)."""
+    by_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1]
+        kind = None
+        for k in _COLLECTIVES:
+            # match the opcode, not fused names: " all-reduce(" or "all-reduce-start("
+            if re.search(rf"\b{k}(-start)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        sizes = [_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(stripped)]
+        if sizes:
+            by_kind[kind] += max(sizes)
+            counts[kind] += 1
+    return sum(by_kind.values()), by_kind, counts
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    scheme: str
+    chips: int
+    hlo_gflops: float            # whole-fleet dot FLOPs (per-dev x chips)
+    hlo_gflops_per_device: float
+    hlo_gbytes_per_device: float  # HBM bytes accessed per device
+    collective_gbytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_gflops: float          # 6*N*D (or 6*N_active*D)
+    useful_flops_ratio: float    # model / hlo (whole-fleet)
+    bytes_per_device: float      # peak per-device memory (args+temps)
+    collective_counts: Dict[str, int]
+    collective_by_kind_gb: Dict[str, float]
+    residual_while_loops: int
+    cost_analysis_gflops: float  # XLA's own (unreliable on CPU) number
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def compute_roofline(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    scheme: str,
+    chips: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    model_flops: float,
+    bytes_per_device: float,
+) -> Roofline:
+    """All rate terms are per-device over per-chip peaks (the SPMD module
+    is the per-device program); whole-fleet figures are x chips."""
+    from repro.launch import hlo_analysis as ha
+
+    summary = ha.analyze(hlo_text)
+    flops_dev = summary.dot_flops
+    # 'bytes accessed' from cost_analysis is per-device (elementwise +
+    # fusion operands); reliable because layer scans are fully unrolled.
+    bytes_dev = float(cost.get("bytes accessed", cost.get("bytes_accessed", 0.0)))
+    coll_dev = summary.collective_bytes
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll_dev / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    fleet_flops = flops_dev * chips
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, scheme=scheme, chips=chips,
+        hlo_gflops=fleet_flops / 1e9,
+        hlo_gflops_per_device=flops_dev / 1e9,
+        hlo_gbytes_per_device=bytes_dev / 1e9,
+        collective_gbytes_per_device=coll_dev / 1e9,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bottleneck=bottleneck,
+        model_gflops=model_flops / 1e9,
+        useful_flops_ratio=(model_flops / fleet_flops) if fleet_flops else 0.0,
+        bytes_per_device=bytes_per_device,
+        collective_counts=summary.collective_counts,
+        collective_by_kind_gb={k: v / 1e9 for k, v in summary.collective_by_kind.items() if v},
+        residual_while_loops=summary.residual_while_loops,
+        cost_analysis_gflops=float(cost.get("flops", 0.0)) / 1e9,
+    )
+
+
+def compute_roofline_from_summary(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    scheme: str,
+    chips: int,
+    summary,                    # hlo_analysis.HloSummary (possibly extrapolated)
+    bytes_accessed: float,      # per-device HBM bytes
+    xla_flops: float,
+    model_flops: float,
+    bytes_per_device: float,
+) -> Roofline:
+    flops_dev = summary.dot_flops
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    coll_s = summary.collective_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    fleet_flops = flops_dev * chips
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, scheme=scheme, chips=chips,
+        hlo_gflops=fleet_flops / 1e9,
+        hlo_gflops_per_device=flops_dev / 1e9,
+        hlo_gbytes_per_device=bytes_accessed / 1e9,
+        collective_gbytes_per_device=summary.collective_bytes / 1e9,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bottleneck=bottleneck,
+        model_gflops=model_flops / 1e9,
+        useful_flops_ratio=(model_flops / fleet_flops) if fleet_flops else 0.0,
+        bytes_per_device=bytes_per_device,
+        collective_counts=summary.collective_counts,
+        collective_by_kind_gb={k: v / 1e9 for k, v in summary.collective_by_kind.items() if v},
+        residual_while_loops=summary.residual_while_loops,
+        cost_analysis_gflops=xla_flops / 1e9,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for training; 2*N*D for inference (per forward);
+    MoE uses active params."""
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

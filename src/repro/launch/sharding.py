@@ -1,0 +1,132 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Model code annotates every param dim with a logical name ("vocab",
+"ffn", "heads", "kv", "experts", "embed", "layers", ...).  This module
+turns those into PartitionSpecs for a concrete mesh under a named
+scheme:
+
+- ``ep``   tp + experts sharded over "data" (pairs with the shard_map
+  all-to-all dispatch, models/moe_a2a.py).
+- ``tp``   (paper-faithful baseline analog): Megatron-style tensor
+  parallelism on the "model" axis (vocab/ffn/heads/kv; expert FFN inner
+  dim), parameters REPLICATED over the "data"/"pod" axes (pure DP).
+- ``fsdp`` (beyond-paper optimized): additionally shards a suitable
+  param dim over "data" (experts first — expert parallelism — then
+  embed/vocab rows), which also shards gradients and optimizer state
+  (same specs), cutting per-device state by the data-axis size.
+
+Divisibility fallbacks are explicit: a dim that does not divide evenly
+is left replicated (e.g. kv_heads=8 on model=16 => replicated KV,
+standard GQA-TP practice; whisper heads=20 => attention stays
+replicated and only FFN is TP).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# candidates for the "model" (TP) axis, in priority order
+_MODEL_CANDIDATES = ("vocab", "ffn", "heads", "kv")
+# candidates for the "data" (FSDP) axis, in priority order
+_DATA_CANDIDATES = ("experts", "embed", "vocab", "ffn")
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def spec_for_param(
+    axes: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    scheme: str = "tp",
+) -> P:
+    """Build a PartitionSpec for one param from its logical dim names."""
+    msize = _axis_size(mesh, "model")
+    dsize = _axis_size(mesh, "data")
+    assign: list = [None] * len(axes)
+
+    def place(mesh_axis: str, size: int, candidates) -> None:
+        for cand in candidates:
+            for i, name in enumerate(axes):
+                if name == cand and assign[i] is None and shape[i] % size == 0 and size > 1:
+                    assign[i] = mesh_axis
+                    return
+
+    place("model", msize, _MODEL_CANDIDATES)
+    if scheme == "fsdp":
+        place("data", dsize, _DATA_CANDIDATES)
+    elif scheme == "ep":
+        # expert parallelism only: shard the expert dim over data; dense
+        # params stay replicated over data (no loop-hoisted gathers)
+        place("data", dsize, ("experts",))
+    elif scheme != "tp":
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return P(*assign)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Global-batch sharding over (pod, data)."""
+    names = [n for n in ("pod", "data") if _axis_size(mesh, n) > 1]
+    return P(tuple(names) if names else None)
+
+
+def spec_for_activation(
+    axes: Tuple[Optional[str], ...], shape: Tuple[int, ...], mesh: Mesh
+) -> P:
+    """Cache / activation specs: 'batch' -> (pod,data); 'ctx' -> data
+    (context-parallel long decode); 'kv'/'heads' -> model."""
+    assign: list = [None] * len(axes)
+    for i, name in enumerate(axes):
+        if name == "batch":
+            bnames = [n for n in ("pod", "data") if _axis_size(mesh, n) > 1]
+            total = int(np.prod([_axis_size(mesh, n) for n in bnames])) if bnames else 1
+            if bnames and shape[i] % total == 0:
+                assign[i] = tuple(bnames)
+        elif name == "ctx" and shape[i] % _axis_size(mesh, "data") == 0:
+            assign[i] = "data"
+        elif name in ("kv", "heads", "ffn") and shape[i] % _axis_size(mesh, "model") == 0 \
+                and _axis_size(mesh, "model") > 1:
+            assign[i] = "model"
+    return P(*assign)
+
+
+def param_shardings(axes_tree: Any, shapes_tree: Any, mesh: Mesh,
+                    scheme: str = "tp") -> Any:
+    """NamedSharding pytree for params (matched structure with axes)."""
+    return jax.tree_util.tree_map(
+        lambda ax, sh: NamedSharding(mesh, spec_for_param(tuple(ax), sh.shape, mesh, scheme)),
+        axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def cache_shardings(cache_axes_tree: Any, shapes_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda ax, sh: NamedSharding(mesh, spec_for_activation(tuple(ax), sh.shape, mesh)),
+        cache_axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def opt_state_shardings(param_shardings_tree: Any, opt_state_shapes: Any, mesh: Mesh) -> Any:
+    """AdamW m/v mirror param shardings; scalars replicated."""
+    def build(shape_leaf, path_hint=None):
+        return NamedSharding(mesh, P())
+
+    # match structure: {"m": params-like, "v": params-like, "t": scalar}
+    if isinstance(opt_state_shapes, dict) and set(opt_state_shapes) == {"m", "v", "t"}:
+        return {
+            "m": param_shardings_tree,
+            "v": param_shardings_tree,
+            "t": NamedSharding(mesh, P()),
+        }
+    if isinstance(opt_state_shapes, tuple) and opt_state_shapes == ():
+        return ()
+    # momentum: params-like
+    return param_shardings_tree

@@ -1,0 +1,68 @@
+"""Input specs per (architecture x input shape).
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (no allocation)
+for dry-run lowering; ``make_batch`` materializes small concrete batches
+for smoke tests.  Modality frontends are stubs per the assignment:
+VLM patch embeddings and audio frame embeddings arrive precomputed.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES_BY_NAME, InputShape, ModelConfig
+from repro.models import registry
+
+
+def train_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    sd = jax.ShapeDtypeStruct
+    ct = jnp.dtype(cfg.compute_dtype)
+    specs = {
+        "tokens": sd((batch, seq), jnp.int32),
+        "labels": sd((batch, seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = sd((batch, cfg.n_patches, cfg.d_model), ct)
+    if cfg.family == "encdec":
+        specs["audio_embeds"] = sd((batch, cfg.encoder_len, cfg.d_model), ct)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, batch: int, seq: int) -> Tuple[Any, ...]:
+    """(token, pos, cache) ShapeDtypeStructs for serve_step.
+
+    ``eval_shape`` keeps the (potentially hundreds-of-GB) cache abstract —
+    no allocation ever happens on the host."""
+    sd = jax.ShapeDtypeStruct
+    cache_specs = jax.eval_shape(
+        lambda: registry.init_decode_cache(cfg, batch, seq))
+    return sd((batch, 1), jnp.int32), sd((), jnp.int32), cache_specs
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape | str):
+    if isinstance(shape, str):
+        shape = SHAPES_BY_NAME[shape]
+    if shape.mode in ("train", "prefill"):
+        return train_specs(cfg, shape.global_batch, shape.seq_len)
+    return decode_specs(cfg, shape.global_batch, shape.seq_len)
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Concrete random batch (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, size=(batch, seq)).astype(np.int32)
+    out: Dict[str, jnp.ndarray] = {
+        "tokens": jnp.asarray(toks),
+        "labels": jnp.asarray(toks),
+    }
+    ct = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.n_patches, cfg.d_model)), ct)
+    if cfg.family == "encdec":
+        out["audio_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.encoder_len, cfg.d_model)), ct)
+    return out

@@ -1,0 +1,334 @@
+"""Shared model machinery: parameter builder with logical sharding axes,
+norms, RoPE, (chunked/flash-style) attention, SwiGLU and sort-based
+token-choice MoE dispatch.
+
+Every parameter leaf is created through :class:`Builder`, which records a
+matching pytree of *logical axis names* (e.g. ``("experts", "embed",
+"ffn")``).  ``launch/sharding.py`` maps logical names onto mesh axes with
+divisibility fallbacks — model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+# Optional PartitionSpec tuple for the MoE dispatched buffer (E, C, D),
+# e.g. ("data", None, "model"). None = let SPMD propagation decide.
+MOE_DISPATCH_SPEC = None
+
+# When set to a Mesh, MoE layers route through the shard_map all-to-all
+# dispatch (models/moe_a2a.py) with experts sharded over "data".
+MOE_A2A_MESH = None
+
+# Attention execution path: "xla" (einsum softmax; lowering/analysis) or
+# "pallas" (fused flash kernel; the TPU runtime path, interpret on CPU).
+# Only exercised for the plain causal/windowed case without softcap.
+ATTN_IMPL = "xla"
+
+# When True, layer-stack scans fully unroll.  The dry-run sets this so
+# XLA's cost_analysis sees every layer (while-loop bodies are otherwise
+# counted ONCE, silently under-reporting FLOPs/bytes by ~n_layers x).
+SCAN_UNROLL = False
+
+
+def remat_wrap(body, policy_name: str):
+    """Apply jax.checkpoint with a named policy ('none' disables)."""
+    if policy_name == "none":
+        return body
+    policies = {
+        "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+        "dots_saveable": jax.checkpoint_policies.dots_saveable,
+        "dots_with_no_batch_dims_saveable":
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }
+    return jax.checkpoint(body, policy=policies[policy_name])
+
+
+def next_token_ce(cfg, logits, labels):
+    """Mean next-token CE. ``cfg.ce_impl='lse'`` avoids materializing the
+    (B,S,V) log-softmax: loss = logsumexp(logits) - logits[label]."""
+    logits = logits[:, :-1]
+    labels = labels[:, 1:]
+    if cfg.ce_impl == "lse":
+        l32 = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(l32, axis=-1)
+        picked = jnp.take_along_axis(l32, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - picked)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def logits_dtype(cfg):
+    import jax.numpy as _jnp
+    return _jnp.float32 if cfg.fp32_logits else _jnp.dtype(cfg.compute_dtype)
+
+
+def scan(f, init, xs, length=None):
+    """lax.scan that fully unrolls when SCAN_UNROLL is set (dry-run mode)."""
+    if SCAN_UNROLL:
+        if length is None:
+            length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+        return jax.lax.scan(f, init, xs, length=length, unroll=length)
+    return jax.lax.scan(f, init, xs, length=length)
+
+
+class Builder:
+    """Accumulates (params, logical_axes) pytrees with matched structure."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def _split(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, name: str, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+              scale: Optional[float] = None, init: str = "normal") -> jnp.ndarray:
+        assert len(shape) == len(axes), (name, shape, axes)
+        if init == "zeros":
+            val = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, self.dtype)
+        else:
+            if scale is None:
+                # fan-in scaling over the last dim by default
+                fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                scale = 1.0 / math.sqrt(fan_in)
+            val = (jax.random.normal(self._split(), shape, jnp.float32) * scale).astype(self.dtype)
+        self.params[name] = val
+        self.axes[name] = axes
+        return val
+
+    def child(self, name: str) -> "Builder":
+        sub = Builder(self._split(), self.dtype)
+        self.params[name] = sub.params
+        self.axes[name] = sub.axes
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Normalization / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dh: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh//2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh//2)
+    if ang.ndim == 2:  # (S, dh//2) -> broadcast over batch
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal, sliding window, softcap, chunked-q flash-style)
+# ---------------------------------------------------------------------------
+
+def attention(
+    q: jnp.ndarray,              # (B, Sq, H, dh)
+    k: jnp.ndarray,              # (B, Sk, Hkv, dh)
+    v: jnp.ndarray,              # (B, Sk, Hkv, dh)
+    *,
+    causal: bool = True,
+    window: int = 0,             # 0 = full
+    cap: float = 0.0,
+    q_offset: jnp.ndarray | int = 0,
+    kv_len: jnp.ndarray | int | None = None,  # valid prefix of k/v (decode)
+    chunk_q: int = 0,            # 0 = no chunking
+    score_dtype=jnp.float32,     # S x S chain dtype (perf knob)
+) -> jnp.ndarray:
+    """Grouped-query attention without materializing repeated KV.
+
+    ``chunk_q`` scans over query chunks with online accumulation so the
+    score tensor never exceeds (B, G, R, chunk, Sk) — the jnp analog of
+    flash attention used for long-sequence lowering (the Pallas kernel
+    is the TPU execution path).
+    """
+    B, Sq, H, dh = q.shape
+    Hkv = k.shape[2]
+    R = H // Hkv
+    if (ATTN_IMPL == "pallas" and causal and not cap and kv_len is None
+            and isinstance(q_offset, int) and q_offset == 0
+            and isinstance(window, int) and Sq == k.shape[1]
+            and Sq % 128 == 0 and dh % 8 == 0):
+        from repro.kernels import ops as _kops
+
+        return _kops.flash_attention(q, k, v, causal=True, window=window)
+    qg = q.reshape(B, Sq, Hkv, R, dh)
+    scale = 1.0 / math.sqrt(dh)
+
+    def _block(q_blk: jnp.ndarray, q_pos: jnp.ndarray) -> jnp.ndarray:
+        # q_blk: (B, sq, Hkv, R, dh); q_pos: (sq,)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", q_blk.astype(score_dtype),
+                       k.astype(score_dtype)) * jnp.asarray(scale, score_dtype)
+        s = softcap(s, cap)
+        k_pos = jnp.arange(k.shape[1])
+        mask = jnp.ones((q_blk.shape[1], k.shape[1]), dtype=bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        use_window = not (isinstance(window, int) and window == 0)
+        if use_window:
+            w = jnp.asarray(window)
+            # w <= 0 disables windowing (lets a traced per-layer window
+            # array mix local and global layers in one scanned stack)
+            mask &= jnp.logical_or(w <= 0, k_pos[None, :] > q_pos[:, None] - w)
+        if kv_len is not None:
+            mask &= k_pos[None, :] < jnp.asarray(kv_len)
+        s = jnp.where(mask[None, None, None], s, jnp.asarray(-1e30, score_dtype))
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(score_dtype))
+        return o.astype(q.dtype)
+
+    q_positions = q_offset + jnp.arange(Sq)
+    if chunk_q and Sq % chunk_q == 0 and Sq > chunk_q:
+        nc = Sq // chunk_q
+        qc = qg.reshape(B, nc, chunk_q, Hkv, R, dh).transpose(1, 0, 2, 3, 4, 5)
+        pc = q_positions.reshape(nc, chunk_q)
+
+        def body(_, qp):
+            qi, pi = qp
+            return None, _block(qi, pi)
+
+        _, oc = scan(body, None, (qc, pc))
+        out = oc.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hkv, R, dh)
+    else:
+        out = _block(qg, q_positions)
+    return out.reshape(B, Sq, H, dh)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray, w2: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, w1)
+    g = jnp.einsum("...d,df->...f", x, w3)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(h) * g, w2)
+
+
+# ---------------------------------------------------------------------------
+# Sort-based token-choice MoE with capacity (production TPU pattern:
+# FLOPs scale with top_k, not n_experts; dispatch is gather/scatter +
+# batched expert matmuls -> all-to-all under expert sharding).
+# ---------------------------------------------------------------------------
+
+def moe_ffn(
+    x: jnp.ndarray,               # (B, S, D)
+    router: jnp.ndarray,          # (D, E)
+    w1: jnp.ndarray,              # (E, D, F)
+    w3: jnp.ndarray,              # (E, D, F)
+    w2: jnp.ndarray,              # (E, F, D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,D), router aux load-balance loss scalar)."""
+    B, S, D = x.shape
+    E = router.shape[1]
+    if MOE_A2A_MESH is not None and E % MOE_A2A_MESH.shape.get("data", 1) == 0 \
+            and B % MOE_A2A_MESH.shape.get("data", 1) == 0:
+        from repro.models import moe_a2a
+
+        return moe_a2a.moe_ffn_a2a(
+            x, router, w1, w3, w2, top_k=top_k, mesh=MOE_A2A_MESH,
+            capacity_factor=capacity_factor)
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, top_k)          # (T, k)
+    gate = gate / (jnp.sum(gate, -1, keepdims=True) + 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    assign = jnp.zeros((T, E), jnp.float32).at[jnp.arange(T)[:, None], eidx].add(1.0)
+    aux = E * jnp.mean(jnp.mean(assign, 0) * jnp.mean(probs, 0))
+
+    C = max(int(math.ceil(T * top_k / E * capacity_factor)), top_k)
+    C = (C + 7) // 8 * 8  # MXU-friendly
+
+    flat_e = eidx.reshape(-1)                          # (T*k,)
+    sort_idx = jnp.argsort(flat_e)                     # stable
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(T * top_k) - starts[sorted_e]
+    keep = pos_in_e < C
+    token_of = sort_idx // top_k
+    buf_idx = sorted_e * C + jnp.clip(pos_in_e, 0, C - 1)
+    safe_idx = jnp.where(keep, buf_idx, E * C)         # OOB -> dropped
+
+    buf = jnp.zeros((E * C, D), x.dtype)
+    buf = buf.at[safe_idx].set(xt[token_of], mode="drop")
+    ebuf = buf.reshape(E, C, D)
+    if MOE_DISPATCH_SPEC is not None:
+        # perf knob: pin the dispatched buffer's sharding (expert axis ->
+        # data => all-to-all dispatch instead of gather); set by the
+        # dry-run perf pass.
+        from jax.sharding import PartitionSpec as _P
+        ebuf = jax.lax.with_sharding_constraint(ebuf, _P(*MOE_DISPATCH_SPEC))
+
+    h = jnp.einsum("ecd,edf->ecf", ebuf, w1)
+    g = jnp.einsum("ecd,edf->ecf", ebuf, w3)
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * g, w2).reshape(E * C, D)
+
+    y_tok = jnp.where(keep[:, None], y[jnp.clip(buf_idx, 0, E * C - 1)], 0)
+    gate_sorted = gate.reshape(-1)[sort_idx].astype(x.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[token_of].add(y_tok * gate_sorted[:, None])
+    return out.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Attention projection params
+# ---------------------------------------------------------------------------
+
+def attn_params(b: Builder, d_model: int, n_heads: int, n_kv: int, dh: int) -> None:
+    b.param("wq", (d_model, n_heads, dh), ("embed", "heads", None))
+    b.param("wk", (d_model, n_kv, dh), ("embed", "kv", None))
+    b.param("wv", (d_model, n_kv, dh), ("embed", "kv", None))
+    b.param("wo", (n_heads, dh, d_model), ("heads", None, "embed"))
+
+
+def attn_project_qkv(p: Params, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    return q, k, v
+
+
+def attn_out(p: Params, o: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])

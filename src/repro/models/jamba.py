@@ -1,0 +1,197 @@
+"""Jamba-style hybrid (arXiv:2403.19887): attention:Mamba 1:7 interleave
+with MoE on every other layer.
+
+The 32-layer stack is organized as ``n_blocks = L / attn_layer_period``
+scanned blocks.  Inside a block the 8 sublayers are statically unrolled:
+sublayer 0 is attention, 1..7 are Mamba2 mixers; every sublayer is
+followed by an FFN — dense on even sublayers, MoE (16e top-2) on odd
+ones (Jamba's moe_every=2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import mamba2 as m2
+
+
+def _block_counts(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    period = cfg.attn_layer_period
+    nb = cfg.n_layers // period
+    n_mamba = period - 1
+    n_moe = period // cfg.moe_every       # odd sublayers
+    n_dense = period - n_moe
+    return nb, n_mamba, n_dense, n_moe
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Tuple[cm.Params, cm.Axes]:
+    D, V = cfg.d_model, cfg.padded_vocab
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    F, E, Fe = cfg.d_ff, cfg.n_experts, cfg.expert_d_ff
+    nb, n_mamba, n_dense, n_moe = _block_counts(cfg)
+
+    b = cm.Builder(key, jnp.dtype(cfg.param_dtype))
+    b.param("embed", (V, D), ("vocab", "embed"), scale=1.0)
+    bb = b.child("blocks")
+    # attention sublayer (one per block)
+    bb.param("attn_ln", (nb, D), ("layers", None), init="zeros")
+    bb.param("wq", (nb, D, H, dh), ("layers", "embed", "heads", None))
+    bb.param("wk", (nb, D, Hkv, dh), ("layers", "embed", "kv", None))
+    bb.param("wv", (nb, D, Hkv, dh), ("layers", "embed", "kv", None))
+    bb.param("wo", (nb, H, dh, D), ("layers", "heads", None, "embed"))
+    # mamba sublayers: built flat (nb*n_mamba, ...) then reshaped (nb, n_mamba, ...)
+    mb = bb.child("mamba")
+    m2.mixer_params(mb, cfg, nb * n_mamba)
+    for k in list(mb.params):
+        leaf = mb.params[k]
+        mb.params[k] = leaf.reshape((nb, n_mamba) + leaf.shape[1:])
+        mb.axes[k] = ("layers", None) + mb.axes[k][1:]
+    mb.params["ln"] = jnp.zeros((nb, n_mamba, D), jnp.dtype(cfg.param_dtype))
+    mb.axes["ln"] = ("layers", None, None)
+    # dense FFNs (even sublayers)
+    bb.param("ffn_ln", (nb, n_dense, D), ("layers", None, None), init="zeros")
+    bb.param("w1", (nb, n_dense, D, F), ("layers", None, "embed", "ffn"))
+    bb.param("w3", (nb, n_dense, D, F), ("layers", None, "embed", "ffn"))
+    bb.param("w2", (nb, n_dense, F, D), ("layers", None, "ffn", "embed"))
+    # MoE FFNs (odd sublayers)
+    bb.param("moe_ln", (nb, n_moe, D), ("layers", None, None), init="zeros")
+    bb.param("router", (nb, n_moe, D, E), ("layers", None, "embed", None))
+    bb.param("mw1", (nb, n_moe, E, D, Fe), ("layers", None, "experts", "embed", "ffn"))
+    bb.param("mw3", (nb, n_moe, E, D, Fe), ("layers", None, "experts", "embed", "ffn"))
+    bb.param("mw2", (nb, n_moe, E, Fe, D), ("layers", None, "experts", "ffn", "embed"))
+    b.param("final_norm", (D,), (None,), init="zeros")
+    b.param("lm_head", (V, D), ("vocab", "embed"))
+    return b.params, b.axes
+
+
+def _ffn(cfg, bp, x, sub: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """FFN for sublayer ``sub``; dense on even, MoE on odd."""
+    if sub % cfg.moe_every == 0:
+        i = sub // 2
+        h = cm.rms_norm(x, bp["ffn_ln"][i], cfg.norm_eps)
+        return x + cm.swiglu(h, bp["w1"][i], bp["w3"][i], bp["w2"][i]), jnp.zeros((), jnp.float32)
+    i = (sub - 1) // 2
+    h = cm.rms_norm(x, bp["moe_ln"][i], cfg.norm_eps)
+    y, aux = cm.moe_ffn(h, bp["router"][i], bp["mw1"][i], bp["mw3"][i], bp["mw2"][i],
+                        top_k=cfg.top_k, capacity_factor=cfg.capacity_factor)
+    return x + y, aux
+
+
+def _attn_sub(cfg, bp, x, positions, chunk_q, cache_kv=None, pos=None):
+    h = cm.rms_norm(x, bp["attn_ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, bp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, bp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, bp["wv"])
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    if cache_kv is None:
+        o = cm.attention(q, k, v, causal=True, chunk_q=chunk_q)
+        new_cache = None
+    else:
+        k_l, v_l = cache_kv
+        k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (0, pos, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (0, pos, 0, 0))
+        o = cm.attention(q, k_l, v_l, causal=False, q_offset=pos, kv_len=pos + 1)
+        new_cache = (k_l, v_l)
+    return x + jnp.einsum("bshk,hkd->bsd", o, bp["wo"]), new_cache
+
+
+def forward(cfg: ModelConfig, params: cm.Params, tokens: jnp.ndarray,
+            remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    nb, n_mamba, _, _ = _block_counts(cfg)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    chunk_q = 1024 if S >= 8192 else 0
+
+    def block(x, bp):
+        aux_t = jnp.zeros((), jnp.float32)
+        x, _ = _attn_sub(cfg, bp, x, positions, chunk_q)
+        x, a = _ffn(cfg, bp, x, 0)
+        aux_t += a
+        for j in range(n_mamba):
+            mp = {k: v[j] for k, v in bp["mamba"].items() if k != "ln"}
+            h = cm.rms_norm(x, bp["mamba"]["ln"][j], cfg.norm_eps)
+            x = x + m2.mixer_forward(cfg, mp, h)
+            x, a = _ffn(cfg, bp, x, j + 1)
+            aux_t += a
+        return x, aux_t
+
+    body = block
+    if remat:
+        body = cm.remat_wrap(body, cfg.remat_policy)
+
+    def step(carry, bp):
+        x, aux = carry
+        x, a = body(x, bp)
+        return (x, aux + a), None
+
+    (x, aux), _ = cm.scan(step, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"]).astype(cm.logits_dtype(cfg))
+    return logits, aux
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    nb, n_mamba, _, _ = _block_counts(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    kv = (nb, batch, max_len, cfg.n_kv_heads, cfg.dh)
+    ssm = m2.mixer_cache(cfg, nb * n_mamba, batch)
+    return {
+        "k": jnp.zeros(kv, dt),
+        "v": jnp.zeros(kv, dt),
+        "ssm": ssm["ssm"].reshape((nb, n_mamba) + ssm["ssm"].shape[1:]),
+        "conv": ssm["conv"].reshape((nb, n_mamba) + ssm["conv"].shape[1:]),
+    }
+
+
+def cache_axes(cfg: ModelConfig, shape_name: str = "") -> Dict[str, Tuple]:
+    if shape_name == "long_500k":
+        kv = ("layers", None, "ctx", "kv", None)
+        bt = None
+    else:
+        kv = ("layers", "batch", None, "kv", None)
+        bt = "batch"
+    return {
+        "k": kv,
+        "v": kv,
+        "ssm": ("layers", None, bt, "heads", None, None),
+        "conv": ("layers", None, bt, None, "ffn"),
+    }
+
+
+def decode_step(cfg, params, cache, token, pos):
+    nb, n_mamba, _, _ = _block_counts(cfg)
+    x = params["embed"][token].astype(jnp.dtype(cfg.compute_dtype))
+    positions = pos + jnp.arange(1)
+
+    def step(x, xs):
+        bp, k_l, v_l, ssm_l, conv_l = xs
+        x, (k_l, v_l) = _attn_sub(cfg, bp, x, positions, 0, cache_kv=(k_l, v_l), pos=pos)
+        x, _ = _ffn(cfg, bp, x, 0)
+        ssm_out, conv_out = [], []
+        for j in range(n_mamba):
+            mp = {k: v[j] for k, v in bp["mamba"].items() if k != "ln"}
+            h = cm.rms_norm(x, bp["mamba"]["ln"][j], cfg.norm_eps)
+            out, s_n, c_n = m2.mixer_decode(cfg, mp, ssm_l[j], conv_l[j], h)
+            x = x + out
+            ssm_out.append(s_n)
+            conv_out.append(c_n)
+            x, _ = _ffn(cfg, bp, x, j + 1)
+        return x, (k_l, v_l, jnp.stack(ssm_out), jnp.stack(conv_out))
+
+    x, (ks, vs, ssm, conv) = cm.scan(
+        step, x, (params["blocks"], cache["k"], cache["v"], cache["ssm"], cache["conv"]))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"]).astype(jnp.float32)
+    return logits[:, 0], {"k": ks, "v": vs, "ssm": ssm, "conv": conv}
+
+
+def lm_loss(cfg: ModelConfig, params: cm.Params, batch: Dict[str, Any],
+            remat: bool = True) -> jnp.ndarray:
+    logits, aux = forward(cfg, params, batch["tokens"], remat=remat)
+    return cm.next_token_ce(cfg, logits, batch["labels"]) + cfg.router_aux_coef * aux

@@ -1,0 +1,263 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Training/prefill uses the *chunked SSD dual form* (matmul-dominated:
+intra-chunk attention-like term + inter-chunk recurrence over chunk
+states), which is the TPU-friendly formulation — the MXU executes the
+(Q x Q) and (N x hd) einsums, and only a tiny ``lax.scan`` over the
+``S/Q`` chunk states remains sequential.  Decode keeps the recurrent
+state ``(B, nh, N, hd)`` and a depthwise-conv ring buffer.
+
+The mixer is reused by the Jamba hybrid (models/jamba.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+# ---------------------------------------------------------------------------
+# Mixer params
+# ---------------------------------------------------------------------------
+
+def mixer_params(b: cm.Builder, cfg: ModelConfig, L: int) -> None:
+    """Stacked (L, ...) Mamba2 mixer parameters."""
+    D, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, ck = cfg.n_ssm_heads, cfg.ssm_conv_kernel
+    conv_dim = di + 2 * N
+    b.param("in_z", (L, D, di), ("layers", "embed", "ffn"))
+    b.param("in_x", (L, D, di), ("layers", "embed", "ffn"))
+    b.param("in_B", (L, D, N), ("layers", "embed", None))
+    b.param("in_C", (L, D, N), ("layers", "embed", None))
+    b.param("in_dt", (L, D, nh), ("layers", "embed", "heads"))
+    b.param("conv_w", (L, ck, conv_dim), ("layers", None, "ffn"))
+    b.param("conv_b", (L, conv_dim), ("layers", "ffn"), init="zeros")
+    b.param("dt_bias", (L, nh), ("layers", "heads"), init="zeros")
+    b.param("A_log", (L, nh), ("layers", "heads"), scale=0.5)
+    b.param("D_skip", (L, nh), ("layers", "heads"), init="ones")
+    b.param("norm", (L, di), ("layers", "ffn"), init="zeros")
+    b.param("out", (L, di, D), ("layers", "ffn", "embed"))
+
+
+def _conv_causal(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along seq. x: (B,S,Cd); w: (k,Cd)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # k is tiny (4); unrolled taps
+        out = out + pad[:, i : i + x.shape[1]] * w[i]
+    return out + b
+
+
+def _split_proj(cfg: ModelConfig, lp: Dict[str, jnp.ndarray], u: jnp.ndarray):
+    z = jnp.einsum("bsd,de->bse", u, lp["in_z"])
+    x = jnp.einsum("bsd,de->bse", u, lp["in_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", u, lp["in_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", u, lp["in_C"])
+    dt = jnp.einsum("bsd,dh->bsh", u, lp["in_dt"])
+    return z, x, Bm, Cm, dt
+
+
+def ssd_chunked(
+    x: jnp.ndarray,    # (B, S, nh, hd)
+    dt: jnp.ndarray,   # (B, S, nh) — post-softplus
+    A: jnp.ndarray,    # (nh,) negative
+    Bm: jnp.ndarray,   # (B, S, N)
+    Cm: jnp.ndarray,   # (B, S, N)
+    chunk: int,
+    h0: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (y (B,S,nh,hd), final state (B,nh,N,hd))."""
+    B_, S, nh, hd = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(B_, nc, chunk, nh, hd).astype(f32)
+    dtc = dt.reshape(B_, nc, chunk, nh).astype(f32)
+    Bc = Bm.reshape(B_, nc, chunk, N).astype(f32)
+    Cc = Cm.reshape(B_, nc, chunk, N).astype(f32)
+
+    a = dtc * A  # (B,nc,Q,nh), negative
+    a_cs = jnp.cumsum(a, axis=2)          # inclusive
+    a_tot = a_cs[:, :, -1]                # (B,nc,nh)
+    x_dt = xc * dtc[..., None]            # (B,nc,Q,nh,hd)
+
+    # intra-chunk (dual / attention-like) term
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                 # (B,nc,Q,Q)
+    decay = jnp.exp(a_cs[:, :, :, None] - a_cs[:, :, None, :])  # (B,nc,i,j,nh)
+    ii = jnp.arange(chunk)
+    mask = ii[:, None] >= ii[None, :]
+    att = cb[..., None] * decay * mask[None, None, :, :, None]  # (B,nc,i,j,nh)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, x_dt)
+
+    # chunk states
+    sdecay = jnp.exp(a_tot[:, :, None, :] - a_cs)               # (B,nc,j,nh)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, sdecay, x_dt)  # (B,nc,nh,N,hd)
+
+    # inter-chunk recurrence via log-depth associative scan: the linear
+    # recurrence h_c = a_c * h_{c-1} + s_c composes associatively as
+    # (a, s) o (a', s') = (a*a', s*a' + s').  This keeps the SSD layer
+    # loop-free (no nested while under grad+remat — which blew up SPMD
+    # compile time for hybrid stacks) and is the parallel chunk-state
+    # propagation the SSD paper prescribes.
+    if h0 is not None:  # carry-in folds into the first chunk's state
+        states = states.at[:, 0].add(h0 * jnp.exp(a_tot[:, 0])[:, :, None, None])
+    a_chunk = jnp.exp(a_tot)[..., None, None]            # (B,nc,nh,1,1)
+
+    def combine(x, y):
+        a1, s1 = x
+        a2, s2 = y
+        return a1 * a2, s1 * a2 + s2
+
+    _, h_inc = jax.lax.associative_scan(
+        combine, (jnp.broadcast_to(a_chunk, states.shape), states), axis=1)
+    h_final = h_inc[:, -1]
+    # state BEFORE each chunk = inclusive result shifted right by one
+    first = (jnp.zeros_like(h_inc[:, :1]) if h0 is None
+             else h0[:, None].astype(f32))
+    h_ins = jnp.concatenate([first, h_inc[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", Cc, h_ins, jnp.exp(a_cs))
+    y = (y_intra + y_inter).reshape(B_, S, nh, hd)
+    return y.astype(x.dtype), h_final
+
+
+def mixer_forward(
+    cfg: ModelConfig, lp: Dict[str, jnp.ndarray], u: jnp.ndarray
+) -> jnp.ndarray:
+    """Full-sequence Mamba2 mixer. u: (B, S, D) -> (B, S, D)."""
+    B_, S, D = u.shape
+    di, N, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    z, x, Bm, Cm, dt = _split_proj(cfg, lp, u)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(_conv_causal(xbc, lp["conv_w"], lp["conv_b"]))
+    x, Bm, Cm = xbc[..., :di], xbc[..., di : di + N], xbc[..., di + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(x.reshape(B_, S, nh, hd), dt, A, Bm, Cm,
+                       chunk=min(cfg.ssm_chunk, S))
+    y = y + x.reshape(B_, S, nh, hd) * lp["D_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, S, di)
+    y = cm.rms_norm(y * jax.nn.silu(z), lp["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, lp["out"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent) path
+# ---------------------------------------------------------------------------
+
+def mixer_cache(cfg: ModelConfig, L: int, batch: int) -> Dict[str, jnp.ndarray]:
+    di, N = cfg.d_inner, cfg.ssm_state
+    nh, hd, ck = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv_kernel
+    conv_dim = di + 2 * N
+    return {
+        "ssm": jnp.zeros((L, batch, nh, N, hd), jnp.float32),
+        "conv": jnp.zeros((L, batch, ck - 1, conv_dim), jnp.dtype(cfg.param_dtype)),
+    }
+
+
+def mixer_decode(
+    cfg: ModelConfig,
+    lp: Dict[str, jnp.ndarray],
+    ssm_state: jnp.ndarray,   # (B, nh, N, hd)
+    conv_state: jnp.ndarray,  # (B, k-1, conv_dim)
+    u: jnp.ndarray,           # (B, 1, D)
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token recurrent update. Returns (out (B,1,D), ssm', conv')."""
+    B_, _, D = u.shape
+    di, N, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    z, x, Bm, Cm, dt = _split_proj(cfg, lp, u)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)[:, 0]      # (B, conv_dim)
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B,k,conv)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          lp["conv_w"].astype(jnp.float32)) + lp["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    x, Bv, Cv = xbc[..., :di], xbc[..., di : di + N], xbc[..., di + N :]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))  # (B,nh)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    xh = x.reshape(B_, nh, hd).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                 # (B,nh)
+    upd = jnp.einsum("bn,bhp,bh->bhnp", Bv.astype(jnp.float32), xh, dt)
+    ssm_new = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cv.astype(jnp.float32), ssm_new)
+    y = y + xh * lp["D_skip"][None, :, None].astype(jnp.float32)
+    y = y.reshape(B_, 1, di).astype(u.dtype)
+    y = cm.rms_norm(y * jax.nn.silu(z), lp["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, lp["out"])
+    return out, ssm_new, window[:, 1:].astype(conv_state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 LM
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key: jax.Array) -> Tuple[cm.Params, cm.Axes]:
+    D, L, V = cfg.d_model, cfg.n_layers, cfg.padded_vocab
+    b = cm.Builder(key, jnp.dtype(cfg.param_dtype))
+    b.param("embed", (V, D), ("vocab", "embed"), scale=1.0)
+    lb = b.child("layers")
+    lb.param("ln", (L, D), ("layers", None), init="zeros")
+    mixer_params(lb, cfg, L)
+    b.param("final_norm", (D,), (None,), init="zeros")
+    b.param("lm_head", (V, D), ("vocab", "embed"))
+    return b.params, b.axes
+
+
+def forward(cfg: ModelConfig, params: cm.Params, tokens: jnp.ndarray,
+            remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+
+    def body(x, lp):
+        h = cm.rms_norm(x, lp["ln"], cfg.norm_eps)
+        return x + mixer_forward(cfg, lp, h)
+
+    if remat:
+        body = cm.remat_wrap(body, cfg.remat_policy)
+
+    def step(x, lp):
+        return body(x, lp), None
+
+    x, _ = cm.scan(step, x, params["layers"])
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"]).astype(cm.logits_dtype(cfg))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, jnp.ndarray]:
+    del max_len  # constant-size state: the SSM advantage
+    return mixer_cache(cfg, cfg.n_layers, batch)
+
+
+def cache_axes(cfg: ModelConfig, shape_name: str = "") -> Dict[str, Tuple]:
+    return {
+        "ssm": ("layers", "batch", "heads", None, None),
+        "conv": ("layers", "batch", None, "ffn"),
+    }
+
+
+def decode_step(cfg, params, cache, token, pos):
+    del pos
+    x = params["embed"][token].astype(jnp.dtype(cfg.compute_dtype))
+
+    def step(x, xs):
+        lp, ssm_l, conv_l = xs
+        h = cm.rms_norm(x, lp["ln"], cfg.norm_eps)
+        out, ssm_l, conv_l = mixer_decode(cfg, lp, ssm_l, conv_l, h)
+        return x + out, (ssm_l, conv_l)
+
+    x, (ssm, conv) = cm.scan(step, x, (params["layers"], cache["ssm"], cache["conv"]))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"]).astype(jnp.float32)
+    return logits[:, 0], {"ssm": ssm, "conv": conv}
+
+
+def lm_loss(cfg: ModelConfig, params: cm.Params, batch: Dict[str, Any],
+            remat: bool = True) -> jnp.ndarray:
+    logits, _ = forward(cfg, params, batch["tokens"], remat=remat)
+    return cm.next_token_ce(cfg, logits, batch["labels"])

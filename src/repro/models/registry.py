@@ -1,0 +1,72 @@
+"""Uniform model API over families.
+
+Every family module exposes:
+  init(cfg, key) -> (params, logical_axes)
+  lm_loss(cfg, params, batch, remat) -> scalar
+  forward-ish prefill entry (via ``prefill``)
+  init_decode_cache(cfg, batch, max_len) / cache_axes(cfg, shape_name)
+  decode_step(cfg, params, cache, token, pos) -> (logits, cache)
+
+``batch`` contents per family (see launch/specs.py):
+  dense/moe/ssm/hybrid: tokens, labels
+  vlm:                  + patch_embeds (stub ViT frontend)
+  encdec:               + audio_embeds (stub conv frontend)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import jamba, mamba2, transformer, whisper
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba2,
+    "hybrid": jamba,
+    "encdec": whisper,
+}
+
+
+def module_for(cfg: ModelConfig):
+    try:
+        return _FAMILY[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} for {cfg.name}") from None
+
+
+def init(cfg: ModelConfig, key: jax.Array):
+    return module_for(cfg).init(cfg, key)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, Any], remat: bool = True):
+    return module_for(cfg).lm_loss(cfg, params, batch, remat=remat)
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict[str, Any]):
+    """Full-sequence forward returning logits (inference-prefill shape)."""
+    mod = module_for(cfg)
+    if cfg.family == "encdec":
+        logits, _ = mod.forward(cfg, params, batch["tokens"], batch["audio_embeds"])
+    elif cfg.family == "vlm":
+        logits, _ = mod.forward(cfg, params, batch["tokens"],
+                                prefix_embeds=batch.get("patch_embeds"))
+    else:
+        logits, _ = mod.forward(cfg, params, batch["tokens"])
+    return logits
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return module_for(cfg).init_decode_cache(cfg, batch, max_len)
+
+
+def cache_axes(cfg: ModelConfig, shape_name: str = ""):
+    return module_for(cfg).cache_axes(cfg, shape_name)
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    return module_for(cfg).decode_step(cfg, params, cache, token, pos)

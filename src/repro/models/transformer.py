@@ -1,0 +1,211 @@
+"""Decoder-only transformer LM covering the dense, MoE and VLM families:
+
+- granite-3-2b / granite-3-8b / phi4-mini (dense GQA + RoPE + SwiGLU)
+- gemma2-27b (alternating local/global attention, logit softcapping)
+- kimi-k2 (MoE 384e top-8 + shared expert), grok-1 (MoE 8e top-2)
+- internvl2 (stub patch-embedding prefix + dense LM)
+
+Layers are stacked along a leading ``L`` dim and executed with
+``lax.scan`` (compile-time sanity for 61–64-layer configs); per-layer
+heterogeneity (local/global windows) rides along as scanned scalars.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer sliding windows; 0 = full attention."""
+    if cfg.local_global_alternating and cfg.sliding_window:
+        w = np.zeros(cfg.n_layers, np.int32)
+        w[0::2] = cfg.sliding_window  # even layers local, odd global
+        return w
+    if cfg.sliding_window and not cfg.local_global_alternating:
+        return np.full(cfg.n_layers, cfg.sliding_window, np.int32)
+    return np.zeros(cfg.n_layers, np.int32)
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Tuple[cm.Params, cm.Axes]:
+    D, L, V = cfg.d_model, cfg.n_layers, cfg.padded_vocab
+    H, Hkv, dh, F = cfg.n_heads, cfg.n_kv_heads, cfg.dh, cfg.d_ff
+    b = cm.Builder(key, _dtype(cfg))
+    b.param("embed", (V, D), ("vocab", "embed"), scale=1.0)
+    lb = b.child("layers")
+    lb.param("ln1", (L, D), ("layers", None), init="zeros")
+    lb.param("wq", (L, D, H, dh), ("layers", "embed", "heads", None))
+    lb.param("wk", (L, D, Hkv, dh), ("layers", "embed", "kv", None))
+    lb.param("wv", (L, D, Hkv, dh), ("layers", "embed", "kv", None))
+    lb.param("wo", (L, H, dh, D), ("layers", "heads", None, "embed"))
+    lb.param("ln2", (L, D), ("layers", None), init="zeros")
+    if cfg.n_experts:
+        E, Fe = cfg.n_experts, cfg.expert_d_ff
+        lb.param("router", (L, D, E), ("layers", "embed", None))
+        lb.param("w1", (L, E, D, Fe), ("layers", "experts", "embed", "ffn"))
+        lb.param("w3", (L, E, D, Fe), ("layers", "experts", "embed", "ffn"))
+        lb.param("w2", (L, E, Fe, D), ("layers", "experts", "ffn", "embed"))
+        if cfg.n_shared_experts:
+            Fs = cfg.n_shared_experts * Fe
+            lb.param("sw1", (L, D, Fs), ("layers", "embed", "ffn"))
+            lb.param("sw3", (L, D, Fs), ("layers", "embed", "ffn"))
+            lb.param("sw2", (L, Fs, D), ("layers", "ffn", "embed"))
+    else:
+        lb.param("w1", (L, D, F), ("layers", "embed", "ffn"))
+        lb.param("w3", (L, D, F), ("layers", "embed", "ffn"))
+        lb.param("w2", (L, F, D), ("layers", "ffn", "embed"))
+    b.param("final_norm", (D,), (None,), init="zeros")
+    b.param("lm_head", (V, D), ("vocab", "embed"))
+    return b.params, b.axes
+
+
+def _layer_body(
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    lp: Dict[str, jnp.ndarray],
+    window: jnp.ndarray,
+    positions: jnp.ndarray,
+    chunk_q: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One transformer layer. Returns (x, aux_loss)."""
+    h = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    o = cm.attention(q, k, v, causal=True, window=window,
+                     cap=cfg.attn_softcap, chunk_q=chunk_q,
+                     score_dtype=jnp.float32 if cfg.attn_f32
+                     else jnp.dtype(cfg.compute_dtype))
+    x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+    h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        y, aux = cm.moe_ffn(h, lp["router"], lp["w1"], lp["w3"], lp["w2"],
+                            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor)
+        if cfg.n_shared_experts:
+            y = y + cm.swiglu(h, lp["sw1"], lp["sw3"], lp["sw2"])
+    else:
+        y = cm.swiglu(h, lp["w1"], lp["w3"], lp["w2"])
+    return x + y, aux
+
+
+def forward(
+    cfg: ModelConfig,
+    params: cm.Params,
+    tokens: jnp.ndarray,                       # (B, S) int32
+    prefix_embeds: Optional[jnp.ndarray] = None,  # (B, P, D) VLM/stub
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits (B, S_total, V), aux_loss)."""
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    windows = jnp.asarray(layer_windows(cfg))
+    chunk_q = 1024 if S >= 8192 else 0
+
+    body = functools.partial(_layer_body, cfg, positions=positions, chunk_q=chunk_q)
+    if remat:
+        body = cm.remat_wrap(body, cfg.remat_policy)
+
+    def step(carry, xs):
+        x, aux = carry
+        lp, w = xs
+        x, a = body(x, lp, w)
+        return (x, aux + a), None
+
+    (x, aux), _ = cm.scan(step, (x, jnp.zeros((), jnp.float32)),
+                               (params["layers"], windows))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"]).astype(cm.logits_dtype(cfg))
+    logits = cm.softcap(logits, cfg.final_softcap)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single-token serve_step with KV cache)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, jnp.ndarray]:
+    dt = jnp.dtype(cfg.param_dtype)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.dh)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def cache_axes(cfg: ModelConfig, shape_name: str = "") -> Dict[str, Tuple]:
+    """Logical axes for the KV cache: shard kv heads over model; for
+    batch=1 long-context decode, shard the sequence over data instead."""
+    if shape_name == "long_500k":
+        ax = ("layers", None, "ctx", "kv", None)
+    else:
+        ax = ("layers", "batch", None, "kv", None)
+    return {"k": ax, "v": ax}
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: cm.Params,
+    cache: Dict[str, jnp.ndarray],
+    token: jnp.ndarray,     # (B, 1) int32
+    pos: jnp.ndarray,       # scalar int32 — current position
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step: logits for the next token + updated cache."""
+    x = params["embed"][token].astype(jnp.dtype(cfg.compute_dtype))  # (B,1,D)
+    positions = pos + jnp.arange(1)
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def step(x, xs):
+        lp, w, k_l, v_l = xs
+        h = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+        k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (0, pos, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (0, pos, 0, 0))
+        o = cm.attention(q, k_l, v_l, causal=False, window=w,
+                         cap=cfg.attn_softcap, q_offset=pos, kv_len=pos + 1)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+        h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = cm.moe_ffn(h, lp["router"], lp["w1"], lp["w3"], lp["w2"],
+                              top_k=cfg.top_k, capacity_factor=cfg.capacity_factor)
+            if cfg.n_shared_experts:
+                y = y + cm.swiglu(h, lp["sw1"], lp["sw3"], lp["sw2"])
+        else:
+            y = cm.swiglu(h, lp["w1"], lp["w3"], lp["w2"])
+        return x + y, (k_l, v_l)
+
+    x, (ks, vs) = cm.scan(step, x, (params["layers"], windows, cache["k"], cache["v"]))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"]).astype(jnp.float32)
+    logits = cm.softcap(logits, cfg.final_softcap)
+    return logits[:, 0], {"k": ks, "v": vs}
+
+
+# ---------------------------------------------------------------------------
+# Loss / train-step building blocks
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, params: cm.Params, batch: Dict[str, jnp.ndarray],
+            remat: bool = True) -> jnp.ndarray:
+    """Next-token CE (+ router aux).  VLM prefix positions carry no loss."""
+    prefix = batch.get("patch_embeds")
+    logits, aux = forward(cfg, params, batch["tokens"], prefix_embeds=prefix, remat=remat)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]
+    return cm.next_token_ce(cfg, logits, batch["labels"]) + cfg.router_aux_coef * aux

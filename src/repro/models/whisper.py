@@ -1,0 +1,189 @@
+"""Whisper-large-v3-style encoder-decoder (arXiv:2212.04356).
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment
+carve-out: ``input_specs`` provides precomputed audio frame embeddings of
+shape (B, encoder_len, d_model).  We implement the transformer backbone:
+bidirectional encoder, causal decoder with cross-attention, learned
+positional embeddings, GELU MLP (Whisper uses MHA without GQA: kv=20).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def _max_pos(cfg: ModelConfig) -> int:
+    # decoder learned positions; sized for the largest assigned decode shape
+    return 128 if cfg.vocab_size <= 512 else 32_768
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Tuple[cm.Params, cm.Axes]:
+    D, V = cfg.d_model, cfg.padded_vocab
+    H, Hkv, dh, F = cfg.n_heads, cfg.n_kv_heads, cfg.dh, cfg.d_ff
+    Le, Ld = cfg.n_encoder_layers, cfg.n_layers
+    b = cm.Builder(key, jnp.dtype(cfg.param_dtype))
+    b.param("embed", (V, D), ("vocab", "embed"), scale=1.0)
+    b.param("enc_pos", (cfg.encoder_len, D), (None, "embed"), scale=0.02)
+    b.param("dec_pos", (_max_pos(cfg), D), (None, "embed"), scale=0.02)
+    eb = b.child("encoder")
+    eb.param("ln1", (Le, D), ("layers", None), init="zeros")
+    eb.param("wq", (Le, D, H, dh), ("layers", "embed", "heads", None))
+    eb.param("wk", (Le, D, Hkv, dh), ("layers", "embed", "kv", None))
+    eb.param("wv", (Le, D, Hkv, dh), ("layers", "embed", "kv", None))
+    eb.param("wo", (Le, H, dh, D), ("layers", "heads", None, "embed"))
+    eb.param("ln2", (Le, D), ("layers", None), init="zeros")
+    eb.param("mlp_in", (Le, D, F), ("layers", "embed", "ffn"))
+    eb.param("mlp_out", (Le, F, D), ("layers", "ffn", "embed"))
+    b.param("enc_final_norm", (D,), (None,), init="zeros")
+    db = b.child("decoder")
+    db.param("ln1", (Ld, D), ("layers", None), init="zeros")
+    db.param("wq", (Ld, D, H, dh), ("layers", "embed", "heads", None))
+    db.param("wk", (Ld, D, Hkv, dh), ("layers", "embed", "kv", None))
+    db.param("wv", (Ld, D, Hkv, dh), ("layers", "embed", "kv", None))
+    db.param("wo", (Ld, H, dh, D), ("layers", "heads", None, "embed"))
+    db.param("lnx", (Ld, D), ("layers", None), init="zeros")
+    db.param("xwq", (Ld, D, H, dh), ("layers", "embed", "heads", None))
+    db.param("xwk", (Ld, D, Hkv, dh), ("layers", "embed", "kv", None))
+    db.param("xwv", (Ld, D, Hkv, dh), ("layers", "embed", "kv", None))
+    db.param("xwo", (Ld, H, dh, D), ("layers", "heads", None, "embed"))
+    db.param("ln2", (Ld, D), ("layers", None), init="zeros")
+    db.param("mlp_in", (Ld, D, F), ("layers", "embed", "ffn"))
+    db.param("mlp_out", (Ld, F, D), ("layers", "ffn", "embed"))
+    b.param("final_norm", (D,), (None,), init="zeros")
+    b.param("lm_head", (V, D), ("vocab", "embed"))
+    return b.params, b.axes
+
+
+def _mlp(h, w_in, w_out):
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(jnp.einsum("...d,df->...f", h, w_in)), w_out)
+
+
+def encode(cfg: ModelConfig, params: cm.Params, audio_embeds: jnp.ndarray,
+           remat: bool = False) -> jnp.ndarray:
+    """audio_embeds: (B, enc_len, D) stub frontend output -> encoder states."""
+    x = audio_embeds.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + params["enc_pos"][None, : x.shape[1]].astype(x.dtype)
+
+    def body(x, lp):
+        h = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+        o = cm.attention(q, k, v, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+        h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + _mlp(h, lp["mlp_in"], lp["mlp_out"])
+
+    if remat:
+        body = cm.remat_wrap(body, cfg.remat_policy)
+    x, _ = cm.scan(lambda c, lp: (body(c, lp), None), x, params["encoder"])
+    return cm.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _dec_layer(cfg, lp, x, enc, positions, chunk_q, self_kv=None, pos=None):
+    h = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+    if self_kv is None:
+        o = cm.attention(q, k, v, causal=True, chunk_q=chunk_q)
+        new_kv = None
+    else:
+        k_l, v_l = self_kv
+        k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (0, pos, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (0, pos, 0, 0))
+        o = cm.attention(q, k_l, v_l, causal=False, q_offset=pos, kv_len=pos + 1)
+        new_kv = (k_l, v_l)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+    # cross-attention
+    h = cm.rms_norm(x, lp["lnx"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["xwq"])
+    xk = jnp.einsum("bsd,dhk->bshk", enc, lp["xwk"])
+    xv = jnp.einsum("bsd,dhk->bshk", enc, lp["xwv"])
+    o = cm.attention(q, xk, xv, causal=False)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, lp["xwo"])
+    h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + _mlp(h, lp["mlp_in"], lp["mlp_out"]), new_kv
+
+
+def forward(cfg: ModelConfig, params: cm.Params, tokens: jnp.ndarray,
+            audio_embeds: jnp.ndarray, remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    enc = encode(cfg, params, audio_embeds, remat=remat)
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    x = x + params["dec_pos"][None, :S].astype(x.dtype)
+    positions = jnp.arange(S)
+    chunk_q = 1024 if S >= 8192 else 0
+
+    def body(x, lp):
+        out, _ = _dec_layer(cfg, lp, x, enc, positions, chunk_q)
+        return out
+
+    if remat:
+        body = cm.remat_wrap(body, cfg.remat_policy)
+    x, _ = cm.scan(lambda c, lp: (body(c, lp), None), x, params["decoder"])
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"]).astype(cm.logits_dtype(cfg))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, jnp.ndarray]:
+    dt = jnp.dtype(cfg.param_dtype)
+    Ld, Hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.dh
+    return {
+        "k": jnp.zeros((Ld, batch, max_len, Hkv, dh), dt),
+        "v": jnp.zeros((Ld, batch, max_len, Hkv, dh), dt),
+        "xk": jnp.zeros((Ld, batch, cfg.encoder_len, Hkv, dh), dt),
+        "xv": jnp.zeros((Ld, batch, cfg.encoder_len, Hkv, dh), dt),
+    }
+
+
+def precompute_cross_kv(cfg: ModelConfig, params: cm.Params, enc: jnp.ndarray):
+    xk = jnp.einsum("bsd,ldhk->lbshk", enc, params["decoder"]["xwk"])
+    xv = jnp.einsum("bsd,ldhk->lbshk", enc, params["decoder"]["xwv"])
+    return xk, xv
+
+
+def cache_axes(cfg: ModelConfig, shape_name: str = "") -> Dict[str, Tuple]:
+    kv = ("layers", "batch", None, "kv", None)
+    return {"k": kv, "v": kv, "xk": kv, "xv": kv}
+
+
+def decode_step(cfg, params, cache, token, pos):
+    x = params["embed"][token].astype(jnp.dtype(cfg.compute_dtype))
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1)[None].astype(x.dtype)
+
+    def step(x, xs):
+        lp, k_l, v_l, xk_l, xv_l = xs
+        h = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+        k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (0, pos, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (0, pos, 0, 0))
+        o = cm.attention(q, k_l, v_l, causal=False, q_offset=pos, kv_len=pos + 1)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+        h = cm.rms_norm(x, lp["lnx"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["xwq"])
+        o = cm.attention(q, xk_l, xv_l, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["xwo"])
+        h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + _mlp(h, lp["mlp_in"], lp["mlp_out"])
+        return x, (k_l, v_l)
+
+    x, (ks, vs) = cm.scan(
+        step, x, (params["decoder"], cache["k"], cache["v"], cache["xk"], cache["xv"]))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"]).astype(jnp.float32)
+    return logits[:, 0], {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
+
+
+def lm_loss(cfg: ModelConfig, params: cm.Params, batch: Dict[str, Any],
+            remat: bool = True) -> jnp.ndarray:
+    logits, _ = forward(cfg, params, batch["tokens"], batch["audio_embeds"], remat=remat)
+    return cm.next_token_ce(cfg, logits, batch["labels"])

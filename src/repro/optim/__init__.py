@@ -1,0 +1,7 @@
+"""Pure-pytree optimizers: SGD / momentum / AdamW.
+
+Minimal optax-free implementations so the framework is dependency-light;
+states are pytrees matching params, so they shard with the same
+PartitionSpecs (FSDP shards optimizer state for free).
+"""
+from repro.optim.optimizers import adamw, get, momentum, sgd, Optimizer  # noqa: F401

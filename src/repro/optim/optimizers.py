@@ -1,0 +1,89 @@
+"""SGD / momentum / AdamW as (init, update) pairs over pytrees."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params, lr)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new = jax.tree_util.tree_map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params, lr):
+        state = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(m.dtype), state, grads)
+        new = jax.tree_util.tree_map(lambda p, m: p - lr * m.astype(p.dtype), params, state)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=None) -> Optimizer:
+    """AdamW with optional reduced-precision moments (state_dtype='bfloat16'
+    is the memory-optimized beyond-paper variant used in §Perf)."""
+
+    def init(params):
+        def z(p):
+            dt = jnp.dtype(state_dtype) if state_dtype else p.dtype
+            return jnp.zeros(p.shape, dt)
+
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        c1 = 1.0 - b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_n = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_n = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            step = lr * (m_n / c1) / (jnp.sqrt(v_n / c2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype), m_n.astype(m.dtype), v_n.astype(v.dtype)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def get(name: str, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd()
+    if name == "momentum":
+        return momentum(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

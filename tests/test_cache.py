@@ -1,0 +1,139 @@
+"""Soft-label cache invariants (paper Alg. 1/2, §III-C/D)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cache as cl
+
+
+def _rand_probs(rng, n, N):
+    p = rng.random((n, N)) + 1e-6
+    return jnp.asarray(p / p.sum(-1, keepdims=True), jnp.float32)
+
+
+def test_signal_lifecycle():
+    rng = np.random.default_rng(0)
+    c = cl.init_cache(50, 4)
+    idx = jnp.arange(10)
+    D = 3
+    # round 1: everything missing
+    m = cl.miss_mask(c, idx, 1, D)
+    assert m.all()
+    z1 = _rand_probs(rng, 10, 4)
+    c, sig = cl.update_global_cache(c, idx, z1, m, 1)
+    assert (np.asarray(sig) == int(cl.NEWLY_CACHED)).all()
+    # round 2..4: cached
+    for t in (2, 3, 4):
+        m = cl.miss_mask(c, idx, t, D)
+        assert not m.any()
+        sig = cl.signals_for_round(c, idx, m)
+        assert (np.asarray(sig) == int(cl.CACHED)).all()
+    # round 5: age 4 > D=3 -> expired
+    m = cl.miss_mask(c, idx, 5, D)
+    assert m.all()
+    sig = cl.signals_for_round(c, idx, m)
+    assert (np.asarray(sig) == int(cl.EXPIRED)).all()
+    z2 = _rand_probs(rng, 10, 4)
+    c, _ = cl.update_global_cache(c, idx, z2, m, 5)
+    np.testing.assert_allclose(np.asarray(c.values[idx]), np.asarray(z2))
+
+
+def test_d_zero_disables_cache():
+    c = cl.init_cache(10, 3)
+    idx = jnp.arange(5)
+    z = _rand_probs(np.random.default_rng(1), 5, 3)
+    c, _ = cl.update_global_cache(c, idx, z, cl.miss_mask(c, idx, 1, 0), 1)
+    assert cl.miss_mask(c, idx, 2, 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 12), st.integers(2, 30))
+def test_local_cache_reconstructs_server_teacher(seed, D, rounds):
+    """Bit-exact sync invariant: a client applying signals + queue each
+    round reconstructs exactly the server's assembled teacher, and local
+    cache state equals global cache state."""
+    rng = np.random.default_rng(seed)
+    P, N, m = 40, 5, 12
+    cg = cl.init_cache(P, N)
+    ck = cl.init_cache(P, N)
+    for t in range(1, rounds + 1):
+        idx = jnp.asarray(np.sort(rng.choice(P, m, replace=False)))
+        miss = cl.miss_mask(cg, idx, t, D)
+        fresh = _rand_probs(rng, m, N)
+        teacher_srv = cl.assemble_teacher(cg, idx, fresh, miss)
+        cg, sig = cl.update_global_cache(cg, idx, teacher_srv, miss, t)
+        # wire format: queue of missed labels only
+        queue = cl.pack_queue(teacher_srv, np.asarray(miss))
+        dense = cl.unpack_queue(queue, miss, N)
+        ck, teacher_cli = cl.update_local_cache(ck, idx, sig, dense, t)
+        np.testing.assert_allclose(np.asarray(teacher_cli), np.asarray(teacher_srv),
+                                   rtol=0, atol=0)
+    np.testing.assert_array_equal(np.asarray(cg.values), np.asarray(ck.values))
+    np.testing.assert_array_equal(np.asarray(cg.present), np.asarray(ck.present))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+def test_catch_up_resyncs_stale_client(seed, skip):
+    """Section III-D: a client offline for ``skip`` rounds, after applying
+    the catch-up package, matches the global cache exactly."""
+    rng = np.random.default_rng(seed)
+    P, N, m, D = 30, 4, 10, 6
+    cg = cl.init_cache(P, N)
+    ck = cl.init_cache(P, N)
+    last_sync = 0
+    for t in range(1, 4):  # synced rounds
+        idx = jnp.asarray(np.sort(rng.choice(P, m, replace=False)))
+        miss = cl.miss_mask(cg, idx, t, D)
+        fresh = _rand_probs(rng, m, N)
+        teacher = cl.assemble_teacher(cg, idx, fresh, miss)
+        cg, sig = cl.update_global_cache(cg, idx, teacher, miss, t)
+        dense = cl.unpack_queue(cl.pack_queue(teacher, np.asarray(miss)), miss, N)
+        ck, _ = cl.update_local_cache(ck, idx, sig, dense, t)
+        last_sync = t
+    for t in range(4, 4 + skip):  # client offline
+        idx = jnp.asarray(np.sort(rng.choice(P, m, replace=False)))
+        miss = cl.miss_mask(cg, idx, t, D)
+        fresh = _rand_probs(rng, m, N)
+        teacher = cl.assemble_teacher(cg, idx, fresh, miss)
+        cg, _ = cl.update_global_cache(cg, idx, teacher, miss, t)
+    pkg = cl.make_catch_up(cg, last_sync)
+    ck = cl.apply_catch_up(ck, pkg)
+    live = np.asarray(cg.present)
+    np.testing.assert_array_equal(np.asarray(cg.values)[live],
+                                  np.asarray(ck.values)[live])
+    assert cl.catch_up_bytes(pkg) >= 0
+
+
+def test_assemble_prefers_cache_for_hits():
+    rng = np.random.default_rng(3)
+    c = cl.init_cache(20, 3)
+    idx = jnp.arange(6)
+    z1 = _rand_probs(rng, 6, 3)
+    c, _ = cl.update_global_cache(c, idx, z1, cl.miss_mask(c, idx, 1, 5), 1)
+    z2 = _rand_probs(rng, 6, 3)
+    miss = cl.miss_mask(c, idx, 2, 5)  # all hits
+    teacher = cl.assemble_teacher(c, idx, z2, miss)
+    np.testing.assert_allclose(np.asarray(teacher), np.asarray(z1))
+
+
+def test_probabilistic_expiry_never_expires_fresh_and_always_expires_old():
+    import jax
+
+    rng = np.random.default_rng(5)
+    c = cl.init_cache(50, 4)
+    idx = jnp.arange(20)
+    z = _rand_probs(rng, 20, 4)
+    c, _ = cl.update_global_cache(c, idx, z, cl.miss_mask(c, idx, 1, 10), 1)
+    key = jax.random.PRNGKey(0)
+    # age 1 -> hazard 0: never expires
+    m = cl.miss_mask(c, idx, 2, 10, probabilistic=True, key=key)
+    assert not np.asarray(m).any()
+    # age >> D -> hazard 1: always expires
+    m = cl.miss_mask(c, idx, 100, 10, probabilistic=True, key=key)
+    assert np.asarray(m).all()
+    # intermediate age: some expire, deterministically under the same key
+    m1 = cl.miss_mask(c, idx, 6, 10, probabilistic=True, key=key)
+    m2 = cl.miss_mask(c, idx, 6, 10, probabilistic=True, key=key)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))

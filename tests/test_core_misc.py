@@ -1,0 +1,208 @@
+"""Unit tests: cache simulator, comm accounting, losses, optimizers,
+checkpointing, data partitioning, HLO analyzer."""
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import comm, losses
+from repro.core.cache_sim import expected_steady_state_hit_rate, simulate_hit_rate
+from repro.data.synthetic import dirichlet_partition, make_public_private, pad_client_shards
+
+
+# --- cache simulator (paper Alg. 3 / Fig. 3) ------------------------------
+
+def test_sim_matches_analytic_steady_state():
+    for D in (10, 50, 100):
+        sim = simulate_hit_rate(1000, 100, D, 1500, seed=1)
+        steady = sim[700:].mean()
+        analytic = expected_steady_state_hit_rate(1000, 100, D)
+        assert abs(steady - analytic) < 0.03, (D, steady, analytic)
+
+
+def test_sim_d0_all_miss():
+    assert (simulate_hit_rate(100, 10, 0, 50) == 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 50), st.integers(2, 200))
+def test_sim_hit_rate_monotone_in_D(D, rounds):
+    a = simulate_hit_rate(200, 40, D, rounds, seed=3).mean()
+    b = simulate_hit_rate(200, 40, D + 20, rounds, seed=3).mean()
+    assert b >= a - 1e-9
+
+
+# --- comm accounting -------------------------------------------------------
+
+def test_round_cost_scaling():
+    c1 = comm.distillation_round_cost(n_clients=10, n_selected=100,
+                                      n_requested=100, n_classes=10)
+    c2 = comm.distillation_round_cost(n_clients=10, n_selected=100,
+                                      n_requested=50, n_classes=10)
+    assert c2.uplink == pytest.approx(c1.uplink / 2)
+    c3 = comm.distillation_round_cost(n_clients=10, n_selected=100,
+                                      n_requested=100, n_classes=10,
+                                      uplink_bits=1.0)
+    assert c3.uplink == pytest.approx(c1.uplink / 32)
+
+
+def test_ledger_summary():
+    led = comm.CommLedger()
+    led.record(comm.RoundCost(100.0, 200.0))
+    led.record(comm.RoundCost(300.0, 400.0))
+    s = led.summary()
+    assert s["uplink_mean"] == 200.0 and s["uplink_max"] == 300.0
+    assert s["cumulative_total"] == 1000.0
+
+
+# --- losses ---------------------------------------------------------------
+
+def test_soft_ce_equals_kl_plus_entropy():
+    k = jax.random.PRNGKey(0)
+    logits = jax.random.normal(k, (16, 12))
+    teacher = jax.nn.softmax(jax.random.normal(jax.random.fold_in(k, 1), (16, 12)))
+    ce = float(losses.soft_cross_entropy(logits, teacher))
+    kl = float(losses.kl_divergence(teacher, logits))
+    ent = float(-(teacher * jnp.log(teacher)).sum(-1).mean())
+    assert ce == pytest.approx(kl + ent, rel=1e-5)
+
+
+def test_hard_ce_ignores_negative_labels():
+    logits = jnp.zeros((4, 5))
+    labels = jnp.asarray([0, 1, -1, -1])
+    out = float(losses.cross_entropy(logits, labels))
+    assert out == pytest.approx(math.log(5), rel=1e-5)
+
+
+# --- optimizers -------------------------------------------------------------
+
+def test_optimizers_descend_quadratic():
+    from repro.optim import get
+
+    target = jnp.asarray([1.0, -2.0, 3.0])
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for name, lr, steps in (("sgd", 0.1, 200), ("momentum", 0.05, 200),
+                            ("adamw", 0.1, 300)):
+        opt = get(name)
+        params = {"w": jnp.zeros(3)}
+        state = opt.init(params)
+        for _ in range(steps):
+            g = jax.grad(loss)(params)
+            params, state = opt.update(g, state, params, lr)
+        assert float(loss(params)) < 1e-2, name
+
+
+def test_adamw_bf16_state_dtype():
+    from repro.optim import get
+
+    opt = get("adamw", state_dtype="bfloat16")
+    params = {"w": jnp.zeros(4, jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+# --- checkpointing -----------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import load_pytree, save_pytree
+
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.bfloat16), "d": jnp.asarray(3, jnp.int32)},
+    }
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_pytree(path, tree)
+    loaded = load_pytree(path, tree)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                                   np.asarray(b, np.float32)),
+        tree, loaded)
+    assert loaded["b"]["c"].dtype == jnp.bfloat16
+
+
+# --- data partitioning --------------------------------------------------------
+
+def test_dirichlet_partition_covers_everything():
+    y = np.random.default_rng(0).integers(0, 10, 1000).astype(np.int32)
+    parts = dirichlet_partition(y, 10, alpha=0.1, seed=0)
+    all_idx = np.concatenate(parts)
+    assert sorted(all_idx) == list(range(1000))
+    assert all(len(p) >= 2 for p in parts)
+
+
+def test_dirichlet_alpha_controls_skew():
+    y = np.random.default_rng(0).integers(0, 10, 5000).astype(np.int32)
+
+    def skew(alpha):
+        parts = dirichlet_partition(y, 10, alpha=alpha, seed=0)
+        # mean per-client class concentration (fraction in top class)
+        fracs = []
+        for p in parts:
+            counts = np.bincount(y[p], minlength=10)
+            fracs.append(counts.max() / max(counts.sum(), 1))
+        return np.mean(fracs)
+
+    assert skew(0.05) > skew(10.0) + 0.2
+
+
+def test_pad_client_shards_mask():
+    x = np.arange(20, dtype=np.float32).reshape(10, 2)
+    y = np.arange(10, dtype=np.int32)
+    parts = [np.array([0, 1, 2]), np.array([3])]
+    xs, ys, m = pad_client_shards(x, y, parts)
+    assert xs.shape == (2, 3, 2) and m.sum() == 4
+    assert (ys[1][m[1]] == [3]).all()
+
+
+def test_public_private_distinct_distributions():
+    d = make_public_private(500, 500, 5, 8, seed=0, public_shift=2.0)
+    # public centers shifted: mean distance should be clearly nonzero
+    assert d["x_public"].shape == (500, 8)
+    assert not np.allclose(d["x_private"].mean(0), d["x_public"].mean(0), atol=0.2)
+
+
+# --- HLO analyzer --------------------------------------------------------------
+
+def test_hlo_analyzer_counts_dots_and_collectives():
+    from repro.launch import hlo_analysis as ha
+
+    text = """
+HloModule test
+
+%fused (p: f32[8,16]) -> f32[8,32] {
+  %p = f32[8,16]{1,0} parameter(0)
+  %w = f32[16,32]{1,0} constant(0)
+  ROOT %dot.1 = f32[8,32]{1,0} dot(%p, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,32] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %c = f32[8,32]{1,0} fusion(%a), kind=kLoop, calls=%fused
+  %c2 = f32[8,32]{1,0} fusion(%a), kind=kLoop, calls=%fused
+  %ar = f32[8,32]{1,0} all-reduce(%c), replica_groups={}
+  ROOT %add = f32[8,32]{1,0} add(%ar, %c2)
+}
+"""
+    s = ha.analyze(text)
+    # dot: 2*8*32*16 = 8192 flops, fusion called twice
+    assert s.dot_flops == pytest.approx(2 * 8192)
+    # all-reduce: 2x 8*32*4 bytes
+    assert s.collective_bytes == pytest.approx(2 * 8 * 32 * 4)
+    assert s.collective_counts.get("all-reduce") == 1
+    assert s.residual_while_loops == 0
+
+
+def test_probabilistic_sim_smoother_than_hard_at_large_D():
+    hard = simulate_hit_rate(2000, 200, 100, 600, seed=2)[200:]
+    from repro.core.cache_sim import simulate_hit_rate_probabilistic
+
+    prob = simulate_hit_rate_probabilistic(2000, 200, 100, 600, seed=2)[200:]
+    assert prob.std() < hard.std()  # no mass-refresh waves

@@ -1,0 +1,123 @@
+"""Unit + property tests for ERA / Enhanced ERA (paper §III-E, App. B/C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import era
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_probs(draw_arr):
+    p = np.abs(draw_arr) + 1e-6
+    return p / p.sum(axis=-1, keepdims=True)
+
+
+probs_strategy = hnp.arrays(
+    np.float64, st.tuples(st.integers(1, 5), st.integers(2, 12)),
+    elements=st.floats(0.01, 10.0),
+).map(_rand_probs)
+
+
+def test_beta_one_is_identity():
+    z = jnp.asarray(np.random.default_rng(0).dirichlet(np.ones(10), size=50))
+    out = era.enhanced_era(z, 1.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(z), atol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(probs_strategy, st.floats(0.3, 5.0))
+def test_output_is_distribution(p, beta):
+    out = np.asarray(era.enhanced_era(jnp.asarray(p, jnp.float32), beta))
+    assert np.all(out >= 0)
+    np.testing.assert_allclose(out.sum(-1), 1.0, atol=1e-4)
+
+
+@settings(max_examples=50, deadline=None)
+@given(probs_strategy, st.floats(0.5, 3.0), st.floats(0.05, 1.5))
+def test_entropy_monotone_in_beta(p, b1, delta):
+    """Appendix B majorization corollary: H(beta2) <= H(beta1) for beta2>beta1."""
+    b2 = b1 + delta
+    z = jnp.asarray(p, jnp.float32)
+    h1 = np.asarray(era.entropy(era.enhanced_era(z, b1)))
+    h2 = np.asarray(era.entropy(era.enhanced_era(z, b2)))
+    assert np.all(h2 <= h1 + 1e-4)
+
+
+@settings(max_examples=50, deadline=None)
+@given(probs_strategy, st.floats(1.01, 4.0))
+def test_majorization_prefix_sums(p, beta):
+    """Appendix B Theorem 1: sorted prefix sums of beta-sharpened dominate."""
+    z = np.sort(np.asarray(p, np.float64), axis=-1)[..., ::-1]  # descending
+    out1 = z / z.sum(-1, keepdims=True)
+    out2 = z**beta / (z**beta).sum(-1, keepdims=True)
+    cs1 = np.cumsum(out1, -1)
+    cs2 = np.cumsum(out2, -1)
+    assert np.all(cs2 >= cs1 - 1e-9)  # sharper distribution majorizes
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.05, 0.45), st.floats(1.2, 9.0), st.floats(0.5, 3.0))
+def test_scale_invariance_of_log_ratio(zj, ratio, beta):
+    """Appendix C: Enhanced-ERA output log-ratio depends only on the input
+    ratio R and beta (ln Ratio = beta ln R), not on the absolute scale."""
+    zi = zj * ratio
+    rest = 1.0 - zi - zj
+    if rest <= 0.01:
+        return
+    # two inputs with identical ratio R but different scales
+    a = np.array([zi, zj, rest])
+    b = np.array([zi / 2, zj / 2, 1.0 - (zi + zj) / 2])
+    for N, vec in (("a", a), ("b", b)):
+        out = np.asarray(era.enhanced_era(jnp.asarray(vec, jnp.float32), beta), np.float64)
+        lr = np.log(out[0]) - np.log(out[1])
+        np.testing.assert_allclose(lr, beta * np.log(ratio), rtol=1e-3, atol=1e-3)
+
+
+def test_era_is_scale_dependent_counterexample():
+    """Appendix C: conventional ERA maps identical-ratio inputs to
+    DIFFERENT log-ratios — the instability Enhanced ERA removes."""
+    T = 0.1
+    a = jnp.asarray([0.15, 0.10, 0.75])
+    b = jnp.asarray([0.30, 0.20, 0.50])  # same ratio z_i/z_j = 1.5
+    oa = np.asarray(era.era(a, T), np.float64)
+    ob = np.asarray(era.era(b, T), np.float64)
+    lra = np.log(oa[0] / oa[1])
+    lrb = np.log(ob[0] / ob[1])
+    np.testing.assert_allclose(lra, 0.05 / T, rtol=1e-3)
+    np.testing.assert_allclose(lrb, 0.10 / T, rtol=1e-3)
+    assert abs(lrb - 2 * lra) < 1e-3  # doubled sharpening for same knowledge
+
+
+def test_era_limits_agree():
+    """T->0 and beta->inf both approach one-hot argmax."""
+    z = jnp.asarray([0.5, 0.3, 0.2])
+    e1 = np.asarray(era.era(z, 0.001))
+    e2 = np.asarray(era.enhanced_era(z, 200.0))
+    np.testing.assert_allclose(e1, [1, 0, 0], atol=1e-6)
+    np.testing.assert_allclose(e2, [1, 0, 0], atol=1e-6)
+
+
+def test_aggregate_weights_and_methods():
+    rng = np.random.default_rng(1)
+    zc = jnp.asarray(rng.dirichlet(np.ones(6), size=(4, 10)))
+    m = era.aggregate_soft_labels(zc, "mean")
+    np.testing.assert_allclose(np.asarray(m), np.asarray(zc.mean(0)), atol=1e-6)
+    w = jnp.asarray([1.0, 1.0, 2.0, 0.0])
+    mw = era.aggregate_soft_labels(zc, "mean", weights=w)
+    expect = (zc[0] + zc[1] + 2 * zc[2]) / 4
+    np.testing.assert_allclose(np.asarray(mw), np.asarray(expect), atol=1e-6)
+    for method, kw in [("era", {"T": 0.1}), ("enhanced_era", {"beta": 1.5})]:
+        out = np.asarray(era.aggregate_soft_labels(zc, method, **kw))
+        np.testing.assert_allclose(out.sum(-1), 1.0, atol=1e-5)
+
+
+def test_enhanced_era_handles_zeros_and_onehot():
+    z = jnp.asarray([[0.0, 0.0, 1.0], [0.5, 0.5, 0.0]])
+    out = np.asarray(era.enhanced_era(z, 2.0))
+    np.testing.assert_allclose(out[0], [0, 0, 1], atol=1e-5)
+    np.testing.assert_allclose(out[1], [0.5, 0.5, 0], atol=1e-5)
+    assert np.isfinite(out).all()

@@ -1,0 +1,156 @@
+"""Pallas kernel sweeps: shapes x dtypes, assert_allclose vs ref.py
+oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import attn_kernel, distill_kernel, era_kernel, ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _probs(key, shape):
+    return jax.random.dirichlet(key, jnp.ones(shape[-1]), shape[:-1])
+
+
+# ---------------------------------------------------------------------------
+# Enhanced ERA
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,N", [(8, 10), (100, 100), (257, 33), (1000, 200)])
+@pytest.mark.parametrize("beta", [0.5, 1.0, 1.5, 3.0])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_era_kernel_sweep(B, N, beta, dtype):
+    z = _probs(KEY, (B, N)).astype(dtype)
+    out = era_kernel.enhanced_era(z, beta, block_b=64)
+    exp = ref.enhanced_era(z, beta)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("K,B,N", [(4, 50, 10), (16, 100, 64), (3, 33, 100)])
+def test_era_fused_kernel(K, B, N):
+    z = _probs(KEY, (K, B, N))
+    out = era_kernel.enhanced_era_fused(z, 1.5)
+    exp = ref.enhanced_era_fused(z, 1.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5, atol=1e-6)
+
+
+def test_era_kernel_matches_core_impl():
+    from repro.core import era as core_era
+
+    z = _probs(KEY, (64, 10))
+    a = np.asarray(core_era.enhanced_era(z, 2.0, impl="jnp"))
+    b = np.asarray(core_era.enhanced_era(z, 2.0, impl="pallas"))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Distillation loss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,V", [(8, 100), (64, 5000), (3, 131), (16, 16384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_distill_kernel_sweep(B, V, dtype):
+    logits = (jax.random.normal(KEY, (B, V)) * 4).astype(dtype)
+    teacher = _probs(jax.random.fold_in(KEY, 1), (B, V)).astype(dtype)
+    out = distill_kernel.distill_loss(logits, teacher, block_b=8, block_v=512)
+    exp = ref.distill_loss(logits, teacher)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_distill_matches_core_loss():
+    from repro.core import losses
+
+    logits = jax.random.normal(KEY, (32, 777)) * 3
+    teacher = _probs(KEY, (32, 777))
+    a = float(losses.soft_cross_entropy(logits, teacher, impl="jnp"))
+    b = float(losses.soft_cross_entropy(logits, teacher, impl="pallas"))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,Hkv,d", [
+    (2, 128, 4, 2, 64),
+    (1, 256, 8, 8, 32),
+    (2, 128, 8, 2, 128),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention_sweep(B, S, H, Hkv, d, causal, window):
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, Hkv, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, Hkv, d), jnp.float32)
+    out = attn_kernel.flash_attention(q, k, v, causal=causal, window=window,
+                                      block_q=64, block_k=64)
+    exp = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(KEY, (1, 128, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 128, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 128, 2, 64), jnp.bfloat16)
+    out = attn_kernel.flash_attention(q, k, v, block_q=64, block_k=64)
+    exp = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_flash_matches_model_attention():
+    """Kernel agrees with the model-zoo attention (the jnp execution path)."""
+    from repro.models import common as cm
+
+    q = jax.random.normal(KEY, (2, 128, 4, 64), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 128, 2, 64), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 128, 2, 64), jnp.float32)
+    a = cm.attention(q, k, v, causal=True)
+    b = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-3)
+
+
+def test_flash_vjp_matches_reference_grads():
+    q = jax.random.normal(KEY, (2, 128, 4, 32))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 128, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 128, 2, 32))
+
+    def loss_flash(q, k, v):
+        return jnp.sum(attn_kernel.flash_attention_diff(
+            q, k, v, True, 0, 64, 64, True) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.flash_attention(q, k, v, causal=True) ** 2)
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_model_attention_pallas_path_parity():
+    """ATTN_IMPL='pallas' routes model attention through the flash kernel
+    with identical results (the TPU runtime path)."""
+    from repro.configs.base import ModelConfig
+    from repro.models import common as cm
+    from repro.models import transformer as tfm
+
+    cfg = ModelConfig(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                      head_dim=32, d_ff=256, vocab_size=300,
+                      param_dtype="float32", compute_dtype="float32")
+    params, _ = tfm.init(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0, 300)
+    l_xla, _ = tfm.forward(cfg, params, toks)
+    try:
+        cm.ATTN_IMPL = "pallas"
+        l_pl, _ = tfm.forward(cfg, params, toks)
+    finally:
+        cm.ATTN_IMPL = "xla"
+    np.testing.assert_allclose(np.asarray(l_xla), np.asarray(l_pl),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,67 @@
+"""Unit tests for roofline math + report generation."""
+import json
+import os
+
+import pytest
+
+from repro.configs.base import SHAPES_BY_NAME
+from repro.configs.registry import ARCHS
+from repro.launch import report, roofline as rl
+
+
+def test_model_flops_modes():
+    cfg = ARCHS["granite-3-2b"]
+    n = cfg.active_param_count()
+    tr = rl.model_flops_for(cfg, SHAPES_BY_NAME["train_4k"])
+    pf = rl.model_flops_for(cfg, SHAPES_BY_NAME["prefill_32k"])
+    de = rl.model_flops_for(cfg, SHAPES_BY_NAME["decode_32k"])
+    assert tr == pytest.approx(6.0 * n * 256 * 4096)
+    assert pf == pytest.approx(2.0 * n * 32 * 32768)
+    assert de == pytest.approx(2.0 * n * 128)
+
+
+def test_moe_uses_active_params():
+    kimi = ARCHS["kimi-k2-1t-a32b"]
+    tr = rl.model_flops_for(kimi, SHAPES_BY_NAME["train_4k"])
+    assert tr < 6.0 * kimi.param_count() * 256 * 4096 * 0.1  # far below total
+
+
+def test_report_tables(tmp_path):
+    rows = [
+        {"arch": "a", "shape": "train_4k", "mesh": "16x16", "scheme": "tp",
+         "status": "ok", "compile_s": 10.0, "bytes_per_device": 1e9,
+         "hlo_gflops_per_device": 100.0, "hlo_gbytes_per_device": 10.0,
+         "collective_gbytes_per_device": 1.0, "collective_counts": {"all-reduce": 3},
+         "compute_s": 0.1, "memory_s": 0.2, "collective_s": 0.02,
+         "bottleneck": "memory", "model_gflops": 90.0, "hlo_gflops": 25600.0,
+         "useful_flops_ratio": 0.9},
+        {"arch": "a", "shape": "long_500k", "mesh": "16x16", "scheme": "tp",
+         "status": "skipped", "reason": "pure full-attention arch"},
+        {"arch": "b", "shape": "train_4k", "mesh": "16x16", "scheme": "tp",
+         "status": "error", "error": "boom"},
+    ]
+    d = tmp_path / "arts"
+    d.mkdir()
+    for i, r in enumerate(rows):
+        (d / f"{i}.json").write_text(json.dumps(r))
+    loaded = report.load(str(d))
+    assert len(loaded) == 3
+    summary = report.summarize(loaded)
+    assert "| 16x16 | tp | 1 | 1 | 1 |" in summary
+    table = report.dryrun_table(loaded, "16x16", "tp")
+    assert "SKIP" in table and "**FAIL**" in table and "all-reducex3" in table
+    roof = report.roofline_table(loaded, "16x16", "tp")
+    assert "**memory**" in roof and "100.00ms" in roof
+
+
+def test_bottleneck_selection():
+    from repro.launch.hlo_analysis import HloSummary
+
+    s = HloSummary(dot_flops=197e12, transcendental_elems=0,
+                   collective_bytes=0, collective_by_kind={},
+                   collective_counts={}, residual_while_loops=0)
+    r = rl.compute_roofline_from_summary(
+        arch="x", shape="train_4k", mesh_name="16x16", scheme="tp",
+        chips=256, summary=s, bytes_accessed=1.0, xla_flops=0.0,
+        model_flops=1.0, bytes_per_device=0.0)
+    assert r.bottleneck == "compute" and r.compute_s == pytest.approx(1.0)

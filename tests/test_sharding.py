@@ -1,0 +1,150 @@
+"""Sharding-rule unit tests + a small-mesh dry-run smoke via subprocess
+(needs its own process: the device count is locked at first jax init)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as sh
+
+
+class _FakeMesh:
+    """Duck-typed mesh: axis_names + devices.shape (no jax device init)."""
+
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        self.devices = type("A", (), {"shape": tuple(sizes.values())})()
+
+
+MESH = _FakeMesh({"data": 16, "model": 16})
+POD = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_tp_rules():
+    # embedding (V, D): vocab -> model
+    assert sh.spec_for_param(("vocab", "embed"), (163840, 7168), MESH, "tp") == P("model", None)
+    # ffn (D, F): ffn -> model
+    assert sh.spec_for_param(("embed", "ffn"), (4096, 14336), MESH, "tp") == P(None, "model")
+    # heads divisible -> model
+    assert sh.spec_for_param(("layers", "embed", "heads", None),
+                             (61, 7168, 64, 112), MESH, "tp") == P(None, None, "model", None)
+    # kv=8 NOT divisible by 16 -> replicated (GQA fallback)
+    assert sh.spec_for_param(("layers", "embed", "kv", None),
+                             (61, 7168, 8, 112), MESH, "tp") == P(None, None, None, None)
+    # whisper heads=20 -> replicated
+    assert sh.spec_for_param(("layers", "embed", "heads", None),
+                             (32, 1280, 20, 64), MESH, "tp") == P(None, None, None, None)
+
+
+def test_fsdp_adds_data_axis():
+    # kimi experts (L, E, D, F): ffn->model, experts->data
+    spec = sh.spec_for_param(("layers", "experts", "embed", "ffn"),
+                             (61, 384, 7168, 2048), MESH, "fsdp")
+    assert spec == P(None, "data", None, "model")
+    # grok experts=8 not divisible -> embed gets data
+    spec = sh.spec_for_param(("layers", "experts", "embed", "ffn"),
+                             (64, 8, 6144, 32768), MESH, "fsdp")
+    assert spec == P(None, None, "data", "model")
+    # embedding: vocab->model, embed->data
+    spec = sh.spec_for_param(("vocab", "embed"), (163840, 7168), MESH, "fsdp")
+    assert spec == P("model", "data")
+
+
+def test_no_axis_reuse():
+    """One mesh axis must never shard two dims of the same param."""
+    for axes, shape in [
+        (("vocab", "ffn"), (4096, 4096)),
+        (("experts", "vocab", "ffn"), (16, 256, 512)),
+    ]:
+        spec = sh.spec_for_param(axes, shape, MESH, "fsdp")
+        used = [s for s in spec if s is not None]
+        assert len(used) == len(set(used))
+
+
+def test_batch_spec():
+    assert sh.batch_spec(MESH) == P(("data",))
+    assert sh.batch_spec(POD) == P(("pod", "data"))
+
+
+def test_activation_specs():
+    # KV cache: batch over (data), kv heads over model when divisible
+    spec = sh.spec_for_activation(("layers", "batch", None, "kv", None),
+                                  (46, 128, 32768, 16, 128), MESH)
+    assert spec == P(None, ("data",), None, "model", None)
+    # long-context: ctx over data
+    spec = sh.spec_for_activation(("layers", None, "ctx", "kv", None),
+                                  (46, 1, 524288, 16, 128), MESH)
+    assert spec == P(None, None, "data", "model", None)
+    # batch=1 cannot shard
+    spec = sh.spec_for_activation(("batch", None), (1, 10), MESH)
+    assert spec == P(None, None)
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_subprocess(tmp_path):
+    """End-to-end dry-run on a tiny arch/mesh in a fresh process."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, json, sys
+import jax
+from repro.models import common as cm
+from repro.configs.registry import ARCHS
+from repro.configs.base import InputShape
+from repro.launch.dryrun import lower_one
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh(2, 4)
+cfg = dataclasses.replace(ARCHS["granite-3-2b"].reduced(), vocab_size=1024)
+for shape in (InputShape("t", 64, 8, "train"), InputShape("d", 256, 8, "decode")):
+    _, comp = lower_one(cfg, shape, mesh, "fsdp")
+    mem = comp.memory_analysis()
+    assert comp.cost_analysis() is not None
+print("DRYRUN_SMOKE_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300, env=env)
+    assert "DRYRUN_SMOKE_OK" in out.stdout, out.stderr[-2000:]
+
+
+@pytest.mark.slow
+def test_moe_a2a_dispatch_subprocess(tmp_path):
+    """shard_map all-to-all MoE dispatch matches the reference capacity
+    dispatch under 4-way expert parallelism, and its HLO contains
+    all-to-all (not all-gather) collectives."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np, re
+from repro.models import common as cm
+from repro.models.moe_a2a import moe_ffn_a2a
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh(4, 2)
+D, F, E, topk = 32, 64, 8, 2
+k = jax.random.PRNGKey(0)
+x = jax.random.normal(k, (8, 16, D))
+router = jax.random.normal(jax.random.fold_in(k,1), (D, E)) * 0.3
+w1 = jax.random.normal(jax.random.fold_in(k,2), (E, D, F)) * 0.1
+w3 = jax.random.normal(jax.random.fold_in(k,3), (E, D, F)) * 0.1
+w2 = jax.random.normal(jax.random.fold_in(k,4), (E, F, D)) * 0.1
+ref, _ = cm.moe_ffn(x, router, w1, w3, w2, top_k=topk, capacity_factor=8.0)
+with mesh:
+    f = jax.jit(lambda *a: moe_ffn_a2a(*a, top_k=topk, mesh=mesh, capacity_factor=8.0))
+    out, _ = f(x, router, w1, w3, w2)
+    hlo = f.lower(x, router, w1, w3, w2).compile().as_text()
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+assert len(re.findall(r"\ball-to-all(-start)?\(", hlo)) >= 2
+assert len(re.findall(r"\ball-gather(-start)?\(", hlo)) == 0
+print("MOE_A2A_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300, env=env)
+    assert "MOE_A2A_OK" in out.stdout, out.stderr[-2000:]
