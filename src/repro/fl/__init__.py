@@ -1,1 +1,16 @@
-from repro.fl.engine import FLConfig, FederatedDistillation, History, run_method  # noqa: F401
+"""Federated-distillation package: strategies x scenarios on a vmapped
+client substrate.  See ``src/repro/fl/README.md`` for the layout."""
+from repro.fl.api import run_method  # noqa: F401
+from repro.fl.baselines import FedAvg, Individual  # noqa: F401
+from repro.fl.config import FLConfig  # noqa: F401
+from repro.fl.rounds import FederatedDistillation, History  # noqa: F401
+from repro.fl.scenarios import (  # noqa: F401
+    Heterogeneity,
+    Outage,
+    Participation,
+    Scenario,
+    bernoulli_participation,
+    fixed_fraction,
+    full_participation,
+)
+from repro.fl.strategies import STRATEGIES, Strategy  # noqa: F401

@@ -1,0 +1,45 @@
+"""Front door: run one FL method end-to-end."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.fl.baselines import FedAvg, Individual
+from repro.fl.config import FLConfig
+from repro.fl.rounds import FederatedDistillation, History
+from repro.fl.scenarios import Scenario
+from repro.fl.strategies import STRATEGIES
+
+__all__ = ["run_method"]
+
+
+def run_method(
+    method: str,
+    cfg: FLConfig,
+    *,
+    cache_duration: int = 0,
+    use_cache: Optional[bool] = None,
+    rounds: Optional[int] = None,
+    probabilistic_expiry: bool = False,
+    scenario: Optional[Scenario] = None,
+    track_local_caches: bool = False,
+    **strategy_kw,
+) -> History:
+    """Run one FL method end-to-end and return its History.
+
+    method in {scarlet, dsfl, cfd, comet, selective_fd, mean, fedavg,
+    individual}.  ``cache_duration``>0 with ``use_cache=True`` plugs the
+    soft-label cache into any distillation method (paper Fig. 11).
+    ``scenario`` composes participation sampling, client outages, and
+    heterogeneous schedules onto any distillation strategy (scenarios
+    are ignored by the fedavg/individual baselines).
+    """
+    if method == "fedavg":
+        return FedAvg(cfg).run(rounds)
+    if method == "individual":
+        return Individual(cfg).run(rounds)
+    strat = STRATEGIES[method](**strategy_kw)
+    return FederatedDistillation(cfg, strat, cache_duration=cache_duration,
+                                 use_cache=use_cache,
+                                 probabilistic_expiry=probabilistic_expiry,
+                                 scenario=scenario,
+                                 track_local_caches=track_local_caches).run(rounds)

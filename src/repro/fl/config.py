@@ -1,0 +1,27 @@
+"""Run configuration for the federated-distillation engine."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    n_clients: int = 20
+    n_classes: int = 10
+    dim: int = 32
+    rounds: int = 100
+    local_steps: int = 5          # E
+    distill_steps: int = 5        # E_dist
+    lr: float = 0.1               # eta
+    lr_dist: float = 0.1          # eta_dist
+    public_size: int = 1000       # |P|
+    public_per_round: int = 100   # |P^t|
+    private_size: int = 2000
+    alpha: float = 0.05           # Dirichlet
+    participation: float = 1.0    # p
+    hidden: int = 64
+    mlp_depth: int = 2
+    cluster_scale: float = 3.0   # class-center spread (task difficulty)
+    noise: float = 1.0           # within-class noise (task difficulty)
+    seed: int = 0
+    eval_every: int = 10

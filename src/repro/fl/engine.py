@@ -1,626 +1,96 @@
-"""Federated distillation engine.
+"""Backwards-compatible facade for the ``repro.fl`` package.
 
-Simulates K clients + server with *vmapped* client training (stacked
-client params, dense (K, n_max) private shards with validity masks).
-One generic round loop hosts every distillation-based method via a
-:class:`Strategy`; parameter-sharing FedAvg and the Individual baseline
-reuse the same substrate.
+The former monolithic engine now lives in dedicated modules — see
+``src/repro/fl/README.md`` for the package layout and extension points:
 
-Workflow per round t (SCARLET Alg. 1 full/partial participation):
-  1. server picks the public subset P^t and computes the request list
-     (cache miss mask) when caching is enabled;
-  2. participating clients distill on the *previous* round's teacher
-     (z-hat^{t-1}), then train locally on their private shard;
-  3. clients emit soft-labels for requested samples (uplink);
-  4. server aggregates (mean / ERA / Enhanced ERA / clustered /
-     selective), assembles the teacher from fresh + cached entries,
-     updates the global cache and signals, distills the server model;
-  5. the communication ledger records exact uplink/downlink bytes,
-     including cache signals and catch-up packages for stale clients.
+- :mod:`repro.fl.config`      — :class:`FLConfig`
+- :mod:`repro.fl.rounds`      — jitted client primitives + round loop
+- :mod:`repro.fl.scenarios`   — participation / outage / heterogeneity
+- :mod:`repro.fl.strategies`  — one module per method + ``STRATEGIES``
+- :mod:`repro.fl.baselines`   — FedAvg, Individual
+- :mod:`repro.fl.api`         — :func:`run_method`
+
+Every public name that used to be defined here is re-exported so
+existing imports (benchmarks, examples, tests) keep working unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import cache as cache_lib
-from repro.core import comm as comm_lib
-from repro.core import era as era_lib
-from repro.data.synthetic import dirichlet_partition, make_public_private, pad_client_shards
-from repro.models.resnet import apply_mlp, init_mlp
-
-
-@dataclass(frozen=True)
-class FLConfig:
-    n_clients: int = 20
-    n_classes: int = 10
-    dim: int = 32
-    rounds: int = 100
-    local_steps: int = 5          # E
-    distill_steps: int = 5        # E_dist
-    lr: float = 0.1               # eta
-    lr_dist: float = 0.1          # eta_dist
-    public_size: int = 1000       # |P|
-    public_per_round: int = 100   # |P^t|
-    private_size: int = 2000
-    alpha: float = 0.05           # Dirichlet
-    participation: float = 1.0    # p
-    hidden: int = 64
-    mlp_depth: int = 2
-    cluster_scale: float = 3.0   # class-center spread (task difficulty)
-    noise: float = 1.0           # within-class noise (task difficulty)
-    seed: int = 0
-    eval_every: int = 10
-
-
-# ---------------------------------------------------------------------------
-# jitted per-client primitives
-# ---------------------------------------------------------------------------
-
-def _ce(params, x, y, mask):
-    logits = apply_mlp(params, x)
-    logp = jax.nn.log_softmax(logits, axis=-1)
-    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
-    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
-
-
-def _kl(params, x, teacher):
-    logits = apply_mlp(params, x)
-    logp = jax.nn.log_softmax(logits, axis=-1)
-    t = jnp.clip(teacher, 1e-12, 1.0)
-    return jnp.mean(jnp.sum(t * (jnp.log(t) - logp), axis=-1))
-
-
-@functools.partial(jax.jit, static_argnames=("steps",))
-def local_train(params, x, y, mask, lr, steps: int):
-    def body(p, _):
-        g = jax.grad(_ce)(p, x, y, mask)
-        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g), None
-
-    params, _ = jax.lax.scan(body, params, None, length=steps)
-    return params
-
-
-@functools.partial(jax.jit, static_argnames=("steps",))
-def distill(params, x, teacher, lr, steps: int):
-    def body(p, _):
-        g = jax.grad(_kl)(p, x, teacher)
-        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g), None
-
-    params, _ = jax.lax.scan(body, params, None, length=steps)
-    return params
-
-
-@jax.jit
-def predict_soft(params, x):
-    return jax.nn.softmax(apply_mlp(params, x), axis=-1)
-
-
-@jax.jit
-def val_loss_soft(params, x, teacher):
-    """Server-side proxy metric (App. D): distillation loss on a held-out
-    public validation split — no test labels needed."""
-    return _kl(params, x, teacher)
-
-
-@jax.jit
-def val_loss_hard(params, x, y, mask):
-    """Client-side proxy metric (App. D): CE on a held-out private
-    validation split."""
-    return _ce(params, x, y, mask)
-
-
-@jax.jit
-def accuracy(params, x, y, mask):
-    pred = jnp.argmax(apply_mlp(params, x), axis=-1)
-    ok = (pred == y) * mask
-    return jnp.sum(ok) / jnp.maximum(jnp.sum(mask), 1.0)
-
-
-val_loss_hard_v = jax.vmap(val_loss_hard, in_axes=(0, 0, 0, 0))
-local_train_v = jax.vmap(local_train, in_axes=(0, 0, 0, 0, None, None))
-distill_v = jax.vmap(distill, in_axes=(0, None, 0, None, None))
-predict_v = jax.vmap(predict_soft, in_axes=(0, None))
-accuracy_v = jax.vmap(accuracy, in_axes=(0, 0, 0, 0))
-
-
-def _select(new, old, keep_mask):
-    """Per-client parameter update gating (partial participation)."""
-    def sel(a, b):
-        m = keep_mask.reshape((-1,) + (1,) * (a.ndim - 1))
-        return jnp.where(m, a, b)
-
-    return jax.tree_util.tree_map(sel, new, old)
-
-
-# ---------------------------------------------------------------------------
-# Strategy protocol
-# ---------------------------------------------------------------------------
-
-class Strategy:
-    """Distillation-method-specific behavior. Subclasses override hooks."""
-
-    name = "base"
-    uses_cache = False
-    uplink_bits = 32.0
-    downlink_bits = 32.0
-
-    def __init__(self, **kw):
-        self.opts = kw
-
-    # uplink payload transform (e.g. CFD quantization). Returns z as the
-    # server sees it.
-    def transmit(self, z_clients: jnp.ndarray, rng: np.random.Generator) -> jnp.ndarray:
-        return z_clients
-
-    # per-(client, sample) upload mask (Selective-FD). True = uploaded.
-    def upload_mask(self, z_clients: jnp.ndarray) -> Optional[jnp.ndarray]:
-        return None
-
-    # aggregate (K, m, N) -> teacher (m, N) used by the SERVER; may also
-    # return per-client teachers (K, m, N) for personalized methods.
-    def aggregate(self, z_clients, upload_mask, t) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
-        raise NotImplementedError
-
-
-class MeanStrategy(Strategy):
-    name = "mean"
-
-    def aggregate(self, z, um, t):
-        return jnp.mean(z, axis=0), None
-
-
-class ERAStrategy(Strategy):
-    """DS-FL: temperature-softmax sharpening of the average."""
-
-    name = "dsfl"
-
-    def aggregate(self, z, um, t):
-        return era_lib.era(jnp.mean(z, axis=0), self.opts.get("T", 0.1)), None
-
-
-class EnhancedERAStrategy(Strategy):
-    """SCARLET: power sharpening (Eq. 4).
-
-    ``beta="adaptive"`` implements the paper's §V future direction:
-    the server tunes beta each round from a server-visible signal — the
-    mean normalized entropy of the averaged soft-labels.  Flat teachers
-    (H_norm near 1, strong non-IID mixing) get sharpened harder; already
-    confident teachers are preserved:
-        beta_t = 1 + (beta_max - 1) * H_norm(z_mean)
-    beta=1 is recovered exactly when teachers are one-hot, matching the
-    near-IID optimum the paper measures (Fig. 15).
-    """
-
-    name = "scarlet"
-    uses_cache = True
-
-    def aggregate(self, z, um, t):
-        zbar = jnp.mean(z, axis=0)
-        beta = self.opts.get("beta", 1.5)
-        if beta == "adaptive":
-            n = zbar.shape[-1]
-            h_norm = jnp.mean(era_lib.entropy(zbar)) / jnp.log(n)
-            beta = 1.0 + (self.opts.get("beta_max", 2.5) - 1.0) * h_norm
-        return era_lib.enhanced_era(zbar, beta), None
-
-
-class CFDStrategy(Strategy):
-    """CFD: quantized uplink soft-labels (b_up bits), plain averaging."""
-
-    name = "cfd"
-
-    def __init__(self, b_up: int = 1, b_down: int = 32, **kw):
-        super().__init__(**kw)
-        self.uplink_bits = float(b_up)
-        self.downlink_bits = float(b_down)
-        self.b_up = b_up
-
-    def transmit(self, z, rng):
-        # per-vector min-max uniform quantization to b_up bits
-        levels = 2 ** self.b_up - 1
-        zmin = z.min(axis=-1, keepdims=True)
-        zmax = z.max(axis=-1, keepdims=True)
-        scale = jnp.maximum(zmax - zmin, 1e-9)
-        q = jnp.round((z - zmin) / scale * levels) / levels
-        deq = q * scale + zmin
-        return deq / jnp.maximum(deq.sum(-1, keepdims=True), 1e-9)
-
-    def aggregate(self, z, um, t):
-        return jnp.mean(z, axis=0), None
-
-
-class COMETStrategy(Strategy):
-    """COMET: cluster clients by soft-label similarity; each client
-    distills from its cluster's teacher (+ server uses the global mean)."""
-
-    name = "comet"
-
-    def __init__(self, n_clusters: int = 2, **kw):
-        super().__init__(**kw)
-        self.c = n_clusters
-
-    def aggregate(self, z, um, t):
-        K = z.shape[0]
-        feats = np.asarray(z.reshape(K, -1), np.float64)
-        # lightweight k-means
-        rng = np.random.default_rng(1234 + t)
-        cent = feats[rng.choice(K, self.c, replace=False)]
-        for _ in range(10):
-            d = ((feats[:, None] - cent[None]) ** 2).sum(-1)
-            assign = d.argmin(1)
-            for j in range(self.c):
-                sel = feats[assign == j]
-                if len(sel):
-                    cent[j] = sel.mean(0)
-        assign = jnp.asarray(assign)
-        one = jax.nn.one_hot(assign, self.c, dtype=z.dtype)          # (K, c)
-        csum = jnp.einsum("kc,kmn->cmn", one, z)
-        cnt = jnp.maximum(one.sum(0), 1.0)[:, None, None]
-        cteach = csum / cnt                                           # (c, m, N)
-        per_client = cteach[assign]                                   # (K, m, N)
-        return jnp.mean(z, axis=0), per_client
-
-
-class SelectiveFDStrategy(Strategy):
-    """Selective-FD: clients upload only confident (low-entropy)
-    soft-labels; the server averages over uploaders per sample."""
-
-    name = "selective_fd"
-
-    def __init__(self, tau_client: float = 0.0625, **kw):
-        super().__init__(**kw)
-        self.tau = tau_client
-
-    def upload_mask(self, z):
-        # normalized entropy in [0,1]; upload when confident
-        N = z.shape[-1]
-        h = era_lib.entropy(z) / jnp.log(N)
-        return h <= (1.0 - self.tau)
-
-    def aggregate(self, z, um, t):
-        w = um.astype(z.dtype)[..., None]
-        num = jnp.sum(z * w, axis=0)
-        den = jnp.maximum(jnp.sum(w, axis=0), 1e-9)
-        teacher = num / den
-        # samples nobody uploaded: fall back to plain mean
-        empty = (jnp.sum(um, axis=0) == 0)[:, None]
-        return jnp.where(empty, jnp.mean(z, axis=0), teacher), None
-
-
-STRATEGIES: Dict[str, Callable[..., Strategy]] = {
-    "mean": MeanStrategy,
-    "dsfl": ERAStrategy,
-    "scarlet": EnhancedERAStrategy,
-    "cfd": CFDStrategy,
-    "comet": COMETStrategy,
-    "selective_fd": SelectiveFDStrategy,
-}
-
-
-# ---------------------------------------------------------------------------
-# Engine
-# ---------------------------------------------------------------------------
-
-@dataclass
-class History:
-    rounds: List[int] = field(default_factory=list)
-    server_acc: List[float] = field(default_factory=list)
-    client_acc: List[float] = field(default_factory=list)
-    cumulative_mb: List[float] = field(default_factory=list)
-    # Appendix-D proxy metrics (no test labels required in deployment)
-    server_val_loss: List[float] = field(default_factory=list)
-    client_val_loss: List[float] = field(default_factory=list)
-    ledger: comm_lib.CommLedger = field(default_factory=comm_lib.CommLedger)
-    final_server_acc: float = 0.0
-    final_client_acc: float = 0.0
-
-    def as_dict(self) -> Dict[str, Any]:
-        return {
-            "rounds": self.rounds,
-            "server_acc": self.server_acc,
-            "client_acc": self.client_acc,
-            "cumulative_mb": self.cumulative_mb,
-            "server_val_loss": self.server_val_loss,
-            "client_val_loss": self.client_val_loss,
-            "comm": self.ledger.summary(),
-            "final_server_acc": self.final_server_acc,
-            "final_client_acc": self.final_client_acc,
-        }
-
-
-class FederatedDistillation:
-    """Generic distillation-based FL run (DS-FL / SCARLET / CFD / COMET /
-    Selective-FD / mean), with optional soft-label caching (drop-in for
-    any strategy — paper Fig. 11) and partial participation."""
-
-    def __init__(self, cfg: FLConfig, strategy: Strategy,
-                 cache_duration: int = 0, use_cache: Optional[bool] = None,
-                 probabilistic_expiry: bool = False):
-        self.cfg = cfg
-        self.strategy = strategy
-        self.D = cache_duration
-        self.probabilistic_expiry = probabilistic_expiry
-        self.use_cache = strategy.uses_cache if use_cache is None else use_cache
-        if self.D == 0:
-            self.use_cache = self.use_cache and False
-        self.rng = np.random.default_rng(cfg.seed)
-        self._setup()
-
-    # ------------------------------------------------------------------
-    def _setup(self) -> None:
-        c = self.cfg
-        data = make_public_private(c.private_size, c.public_size, c.n_classes,
-                                   c.dim, seed=c.seed,
-                                   cluster_scale=c.cluster_scale, noise=c.noise)
-        self.data = data
-        parts = dirichlet_partition(data["y_private"], c.n_clients, c.alpha,
-                                    seed=c.seed)
-        self.xs, self.ys, self.mask = map(
-            jnp.asarray, pad_client_shards(data["x_private"], data["y_private"], parts))
-        tparts = dirichlet_partition(data["y_test"], c.n_clients, c.alpha,
-                                     seed=c.seed + 7)
-        self.xts, self.yts, self.tmask = map(
-            jnp.asarray, pad_client_shards(data["x_test"], data["y_test"], tparts))
-        self.x_pub = jnp.asarray(data["x_public"])
-        self.x_test = jnp.asarray(data["x_test"])
-        self.y_test = jnp.asarray(data["y_test"])
-
-        key = jax.random.PRNGKey(c.seed)
-        keys = jax.random.split(key, c.n_clients + 1)
-        self.client_params = jax.vmap(
-            lambda k: init_mlp(k, c.dim, c.n_classes, c.hidden, c.mlp_depth))(keys[:-1])
-        self.server_params = init_mlp(keys[-1], c.dim, c.n_classes, c.hidden, c.mlp_depth)
-
-        # Appendix-D validation splits: 10% of public for the server proxy,
-        # 10% of each client's private shard for the client proxy
-        n_pub_val = max(c.public_size // 10, 10)
-        self.pub_val_idx = jnp.asarray(
-            np.random.default_rng(c.seed + 99).choice(
-                c.public_size, n_pub_val, replace=False))
-        val_cut = jnp.maximum((jnp.sum(self.mask, 1) * 0.9).astype(jnp.int32), 1)
-        pos = jnp.arange(self.mask.shape[1])[None, :]
-        self.val_mask = jnp.logical_and(self.mask, pos >= val_cut[:, None])
-        self.train_mask = jnp.logical_and(self.mask, pos < val_cut[:, None])
-        self.last_teacher_val: Optional[jnp.ndarray] = None
-
-        self.cache_g = cache_lib.init_cache(c.public_size, c.n_classes)
-        self.prev_teacher: Optional[Tuple[np.ndarray, jnp.ndarray]] = None  # (idx, z)
-        self.last_sync = np.full(c.n_clients, 0, np.int64)  # last participated round
-        self.n_params = sum(x.size for x in jax.tree_util.tree_leaves(self.server_params))
-
-    # ------------------------------------------------------------------
-    def run(self, rounds: Optional[int] = None) -> History:
-        c = self.cfg
-        hist = History()
-        T = rounds or c.rounds
-        for t in range(1, T + 1):
-            self._round(t, hist)
-            if t % c.eval_every == 0 or t == T:
-                self._eval(t, hist)
-        hist.final_server_acc = hist.server_acc[-1] if hist.server_acc else 0.0
-        hist.final_client_acc = hist.client_acc[-1] if hist.client_acc else 0.0
-        return hist
-
-    # ------------------------------------------------------------------
-    def _round(self, t: int, hist: History) -> None:
-        c, s = self.cfg, self.strategy
-        K = c.n_clients
-        part = np.zeros(K, bool)
-        n_part = max(int(round(c.participation * K)), 1)
-        part[self.rng.choice(K, n_part, replace=False)] = True
-        part_j = jnp.asarray(part)
-
-        idx = np.sort(self.rng.choice(c.public_size, c.public_per_round, replace=False))
-        idx_j = jnp.asarray(idx)
-
-        # --- clients: distill on previous teacher, then local training ----
-        new_params = self.client_params
-        if self.prev_teacher is not None:
-            pidx, pteach = self.prev_teacher
-            x_prev = self.x_pub[jnp.asarray(pidx)]
-            if pteach.ndim == 3:  # per-client teachers (COMET)
-                upd = jax.vmap(distill, in_axes=(0, None, 0, None, None))(
-                    new_params, x_prev, pteach, c.lr_dist, c.distill_steps)
-            else:
-                upd = distill_v(new_params, x_prev, jnp.broadcast_to(
-                    pteach, (K,) + pteach.shape), c.lr_dist, c.distill_steps)
-            new_params = _select(upd, new_params, part_j)
-        upd = local_train_v(new_params, self.xs, self.ys,
-                            self.train_mask.astype(jnp.float32), c.lr, c.local_steps)
-        self.client_params = _select(upd, new_params, part_j)
-
-        # --- request list (cache) ----------------------------------------
-        if self.use_cache:
-            miss = cache_lib.miss_mask(
-                self.cache_g, idx_j, t, self.D,
-                probabilistic=self.probabilistic_expiry,
-                key=jax.random.PRNGKey(hash(("expiry", self.cfg.seed, t)) & 0x7FFFFFFF)
-                if self.probabilistic_expiry else None)
-        else:
-            miss = jnp.ones(len(idx), bool)
-        n_req = int(jnp.sum(miss))
-
-        # --- uplink: soft-labels on requested samples ---------------------
-        x_round = self.x_pub[idx_j]
-        z_all = predict_v(self.client_params, x_round)  # (K, m, N)
-        z_all = s.transmit(z_all, self.rng)
-        um = s.upload_mask(z_all)
-        # only participating clients contribute
-        zsel = z_all[part_j] if n_part < K else z_all
-        umsel = None if um is None else (um[part_j] if n_part < K else um)
-
-        fresh, per_client = s.aggregate(zsel, umsel, t)
-
-        # --- assemble teacher + cache update ------------------------------
-        if self.use_cache:
-            teacher = cache_lib.assemble_teacher(self.cache_g, idx_j, fresh, miss)
-            self.cache_g, signals = cache_lib.update_global_cache(
-                self.cache_g, idx_j, teacher, miss, t)
-        else:
-            teacher = fresh
-
-        # --- server distillation ------------------------------------------
-        self.server_params = distill(self.server_params, x_round, teacher,
-                                     c.lr_dist, c.distill_steps)
-        # App.-D proxy teacher on the public validation split: the clients'
-        # (server-visible) aggregated predictions on held-out public data
-        zv = predict_v(self.client_params, self.x_pub[self.pub_val_idx])
-        self.last_teacher_val = jnp.mean(zv, axis=0)
-        if per_client is not None:
-            teach_next = per_client  # COMET: personalized teachers
-        else:
-            teach_next = teacher
-        self.prev_teacher = (idx, teach_next)
-
-        # --- communication accounting --------------------------------------
-        uploaded = n_req
-        if um is not None:  # Selective-FD: only confident entries ride uplink
-            frac = float(jnp.mean(um.astype(jnp.float32)))
-            uploaded = n_req * frac
-        catch_up = 0.0
-        if self.use_cache and c.participation < 1.0:
-            for k in np.where(part)[0]:
-                if self.last_sync[k] < t - 1:
-                    pkg = cache_lib.make_catch_up(self.cache_g, int(self.last_sync[k]))
-                    catch_up += cache_lib.catch_up_bytes(pkg)
-        cost = comm_lib.distillation_round_cost(
-            n_clients=n_part,
-            n_selected=len(idx),
-            n_requested=int(np.ceil(uploaded)) if um is not None else n_req,
-            n_classes=c.n_classes,
-            uplink_bits=s.uplink_bits,
-            downlink_bits=s.downlink_bits,
-            with_cache_signals=self.use_cache,
-            catch_up_down=catch_up,
-        )
-        hist.ledger.record(cost)
-        self.last_sync[part] = t
-
-    # ------------------------------------------------------------------
-    def _eval(self, t: int, hist: History) -> None:
-        sa = float(accuracy(self.server_params, self.x_test, self.y_test,
-                            jnp.ones(len(self.y_test))))
-        ca = float(jnp.mean(accuracy_v(self.client_params, self.xts, self.yts,
-                                       self.tmask.astype(jnp.float32))))
-        hist.rounds.append(t)
-        hist.server_acc.append(sa)
-        hist.client_acc.append(ca)
-        hist.cumulative_mb.append(hist.ledger.cumulative_total / 1e6)
-        # Appendix-D proxies (computable in deployment without test labels)
-        if self.last_teacher_val is not None:
-            hist.server_val_loss.append(float(val_loss_soft(
-                self.server_params, self.x_pub[self.pub_val_idx],
-                self.last_teacher_val)))
-        hist.client_val_loss.append(float(jnp.mean(val_loss_hard_v(
-            self.client_params, self.xs, self.ys,
-            self.val_mask.astype(jnp.float32)))))
-
-
-# ---------------------------------------------------------------------------
-# Parameter-sharing / no-collaboration baselines
-# ---------------------------------------------------------------------------
-
-class FedAvg:
-    def __init__(self, cfg: FLConfig):
-        self.cfg = cfg
-        fd = FederatedDistillation(cfg, MeanStrategy())
-        self.__dict__.update({k: fd.__dict__[k] for k in (
-            "xs", "ys", "mask", "xts", "yts", "tmask", "x_test", "y_test",
-            "client_params", "server_params", "n_params")})
-        self.rng = np.random.default_rng(cfg.seed)
-
-    def run(self, rounds: Optional[int] = None) -> History:
-        c = self.cfg
-        hist = History()
-        sizes = jnp.sum(self.mask, axis=1)
-        w = (sizes / jnp.sum(sizes))
-        T = rounds or c.rounds
-        for t in range(1, T + 1):
-            bcast = jax.tree_util.tree_map(
-                lambda p: jnp.broadcast_to(p, (c.n_clients,) + p.shape),
-                self.server_params)
-            trained = local_train_v(bcast, self.xs, self.ys, self.mask, c.lr, c.local_steps)
-            self.server_params = jax.tree_util.tree_map(
-                lambda p: jnp.tensordot(w, p, axes=(0, 0)), trained)
-            self.client_params = trained
-            hist.ledger.record(comm_lib.fedavg_round_cost(
-                n_clients=c.n_clients, n_params=self.n_params))
-            if t % c.eval_every == 0 or t == T:
-                sa = float(accuracy(self.server_params, self.x_test, self.y_test,
-                                    jnp.ones(len(self.y_test))))
-                ca = float(jnp.mean(accuracy_v(self.client_params, self.xts, self.yts,
-                                               self.tmask.astype(jnp.float32))))
-                hist.rounds.append(t)
-                hist.server_acc.append(sa)
-                hist.client_acc.append(ca)
-                hist.cumulative_mb.append(hist.ledger.cumulative_total / 1e6)
-        hist.final_server_acc = hist.server_acc[-1]
-        hist.final_client_acc = hist.client_acc[-1]
-        return hist
-
-
-class Individual:
-    """Isolated client training — the paper's no-collaboration baseline."""
-
-    def __init__(self, cfg: FLConfig):
-        self.cfg = cfg
-        fd = FederatedDistillation(cfg, MeanStrategy())
-        self.__dict__.update({k: fd.__dict__[k] for k in (
-            "xs", "ys", "mask", "xts", "yts", "tmask", "x_test", "y_test",
-            "client_params", "server_params")})
-
-    def run(self, rounds: Optional[int] = None) -> History:
-        c = self.cfg
-        hist = History()
-        T = rounds or c.rounds
-        for t in range(1, T + 1):
-            self.client_params = local_train_v(
-                self.client_params, self.xs, self.ys, self.mask, c.lr, c.local_steps)
-            hist.ledger.record(comm_lib.RoundCost(0.0, 0.0))
-            if t % c.eval_every == 0 or t == T:
-                ca = float(jnp.mean(accuracy_v(self.client_params, self.xts, self.yts,
-                                               self.tmask.astype(jnp.float32))))
-                hist.rounds.append(t)
-                hist.server_acc.append(0.0)
-                hist.client_acc.append(ca)
-                hist.cumulative_mb.append(0.0)
-        hist.final_server_acc = 0.0
-        hist.final_client_acc = hist.client_acc[-1]
-        return hist
-
-
-# ---------------------------------------------------------------------------
-# front door
-# ---------------------------------------------------------------------------
-
-def run_method(
-    method: str,
-    cfg: FLConfig,
-    *,
-    cache_duration: int = 0,
-    use_cache: Optional[bool] = None,
-    rounds: Optional[int] = None,
-    probabilistic_expiry: bool = False,
-    **strategy_kw,
-) -> History:
-    """Run one FL method end-to-end and return its History.
-
-    method in {scarlet, dsfl, cfd, comet, selective_fd, mean, fedavg,
-    individual}.  ``cache_duration``>0 with ``use_cache=True`` plugs the
-    soft-label cache into any distillation method (paper Fig. 11).
-    """
-    if method == "fedavg":
-        return FedAvg(cfg).run(rounds)
-    if method == "individual":
-        return Individual(cfg).run(rounds)
-    strat = STRATEGIES[method](**strategy_kw)
-    return FederatedDistillation(cfg, strat, cache_duration=cache_duration,
-                                 use_cache=use_cache,
-                                 probabilistic_expiry=probabilistic_expiry).run(rounds)
+from repro.fl.api import run_method
+from repro.fl.baselines import FedAvg, Individual
+from repro.fl.config import FLConfig
+from repro.fl.rounds import (
+    FederatedDistillation,
+    History,
+    _ce,
+    _kl,
+    _select,
+    accuracy,
+    accuracy_v,
+    distill,
+    distill_v,
+    local_train,
+    local_train_masked,
+    local_train_masked_v,
+    local_train_v,
+    predict_soft,
+    predict_v,
+    val_loss_hard,
+    val_loss_hard_v,
+    val_loss_soft,
+)
+from repro.fl.scenarios import (
+    Heterogeneity,
+    Outage,
+    Participation,
+    Scenario,
+    bernoulli_participation,
+    fixed_fraction,
+    full_participation,
+)
+from repro.fl.strategies import (
+    STRATEGIES,
+    CFDStrategy,
+    COMETStrategy,
+    ERAStrategy,
+    EnhancedERAStrategy,
+    MeanStrategy,
+    SelectiveFDStrategy,
+    Strategy,
+)
+
+__all__ = [
+    "FLConfig",
+    "History",
+    "FederatedDistillation",
+    "FedAvg",
+    "Individual",
+    "run_method",
+    "Strategy",
+    "MeanStrategy",
+    "ERAStrategy",
+    "EnhancedERAStrategy",
+    "CFDStrategy",
+    "COMETStrategy",
+    "SelectiveFDStrategy",
+    "STRATEGIES",
+    "Scenario",
+    "Participation",
+    "Outage",
+    "Heterogeneity",
+    "full_participation",
+    "fixed_fraction",
+    "bernoulli_participation",
+    "local_train",
+    "local_train_v",
+    "local_train_masked",
+    "local_train_masked_v",
+    "distill",
+    "distill_v",
+    "predict_soft",
+    "predict_v",
+    "val_loss_soft",
+    "val_loss_hard",
+    "val_loss_hard_v",
+    "accuracy",
+    "accuracy_v",
+]

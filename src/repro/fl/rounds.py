@@ -1,0 +1,430 @@
+"""Generic round loop + jitted client primitives.
+
+The client axis is fully vmapped: client parameters are one stacked
+pytree with leading dimension K, private shards are dense ``(K, n_max)``
+arrays with validity masks, and every per-client primitive below is a
+single jitted program over that axis — a 200-client scenario sweep runs
+without any Python loop over clients.  Scenario heterogeneity
+(per-client local-step counts / learning rates) stays vmapped too, via
+``local_train_masked``: every client scans the same ``max_steps`` and
+masks out its tail steps.
+
+Workflow per round t (SCARLET Alg. 1, any participation scenario):
+  1. server picks the public subset P^t and computes the request list
+     (cache miss mask) when caching is enabled;
+  2. participating clients distill on the *previous* round's teacher
+     (z-hat^{t-1}), then train locally on their private shard;
+  3. clients emit soft-labels for requested samples (uplink);
+  4. server aggregates via the round's Strategy, assembles the teacher
+     from fresh + cached entries, updates the global cache and signals,
+     distills the server model;
+  5. the communication ledger records exact uplink/downlink bytes,
+     including cache signals and catch-up packages for stale clients.
+
+Cache semantics follow Alg. 3 (expiry checked at request time); see
+``repro.core.cache`` and ``src/repro/fl/README.md``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_lib
+from repro.core import comm as comm_lib
+from repro.data.synthetic import dirichlet_partition, make_public_private, pad_client_shards
+from repro.fl.config import FLConfig
+from repro.fl.scenarios import Scenario
+from repro.fl.strategies.base import Strategy
+from repro.models.resnet import apply_mlp, init_mlp
+
+
+# ---------------------------------------------------------------------------
+# jitted per-client primitives
+# ---------------------------------------------------------------------------
+
+def _ce(params, x, y, mask):
+    logits = apply_mlp(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _kl(params, x, teacher):
+    logits = apply_mlp(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    t = jnp.clip(teacher, 1e-12, 1.0)
+    return jnp.mean(jnp.sum(t * (jnp.log(t) - logp), axis=-1))
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def local_train(params, x, y, mask, lr, steps: int):
+    def body(p, _):
+        g = jax.grad(_ce)(p, x, y, mask)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g), None
+
+    params, _ = jax.lax.scan(body, params, None, length=steps)
+    return params
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps",))
+def local_train_masked(params, x, y, mask, lr, n_steps, max_steps: int):
+    """Heterogeneous-schedule variant: runs ``max_steps`` gradient steps
+    but applies only the first ``n_steps`` (per-client, dynamic).  vmap
+    this with per-client ``lr``/``n_steps`` arrays to give every client
+    its own schedule inside one jitted program."""
+
+    def body(p, i):
+        g = jax.grad(_ce)(p, x, y, mask)
+        step = jnp.where(i < n_steps, lr, 0.0)
+        return jax.tree_util.tree_map(lambda a, b: a - step * b, p, g), None
+
+    params, _ = jax.lax.scan(body, params, jnp.arange(max_steps))
+    return params
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def distill(params, x, teacher, lr, steps: int):
+    def body(p, _):
+        g = jax.grad(_kl)(p, x, teacher)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g), None
+
+    params, _ = jax.lax.scan(body, params, None, length=steps)
+    return params
+
+
+@jax.jit
+def predict_soft(params, x):
+    return jax.nn.softmax(apply_mlp(params, x), axis=-1)
+
+
+@jax.jit
+def val_loss_soft(params, x, teacher):
+    """Server-side proxy metric (App. D): distillation loss on a held-out
+    public validation split — no test labels needed."""
+    return _kl(params, x, teacher)
+
+
+@jax.jit
+def val_loss_hard(params, x, y, mask):
+    """Client-side proxy metric (App. D): CE on a held-out private
+    validation split."""
+    return _ce(params, x, y, mask)
+
+
+@jax.jit
+def accuracy(params, x, y, mask):
+    pred = jnp.argmax(apply_mlp(params, x), axis=-1)
+    ok = (pred == y) * mask
+    return jnp.sum(ok) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+val_loss_hard_v = jax.vmap(val_loss_hard, in_axes=(0, 0, 0, 0))
+local_train_v = jax.vmap(local_train, in_axes=(0, 0, 0, 0, None, None))
+local_train_masked_v = jax.vmap(local_train_masked,
+                                in_axes=(0, 0, 0, 0, 0, 0, None))
+distill_v = jax.vmap(distill, in_axes=(0, None, 0, None, None))
+predict_v = jax.vmap(predict_soft, in_axes=(0, None))
+accuracy_v = jax.vmap(accuracy, in_axes=(0, 0, 0, 0))
+
+
+def _select(new, old, keep_mask):
+    """Per-client parameter update gating (partial participation)."""
+    def sel(a, b):
+        m = keep_mask.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+# ---------------------------------------------------------------------------
+# History
+# ---------------------------------------------------------------------------
+
+@dataclass
+class History:
+    rounds: List[int] = field(default_factory=list)
+    server_acc: List[float] = field(default_factory=list)
+    client_acc: List[float] = field(default_factory=list)
+    cumulative_mb: List[float] = field(default_factory=list)
+    # Appendix-D proxy metrics (no test labels required in deployment)
+    server_val_loss: List[float] = field(default_factory=list)
+    client_val_loss: List[float] = field(default_factory=list)
+    ledger: comm_lib.CommLedger = field(default_factory=comm_lib.CommLedger)
+    final_server_acc: float = 0.0
+    final_client_acc: float = 0.0
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "rounds": self.rounds,
+            "server_acc": self.server_acc,
+            "client_acc": self.client_acc,
+            "cumulative_mb": self.cumulative_mb,
+            "server_val_loss": self.server_val_loss,
+            "client_val_loss": self.client_val_loss,
+            "comm": self.ledger.summary(),
+            "final_server_acc": self.final_server_acc,
+            "final_client_acc": self.final_client_acc,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class FederatedDistillation:
+    """Generic distillation-based FL run (DS-FL / SCARLET / CFD / COMET /
+    Selective-FD / mean), with optional soft-label caching (drop-in for
+    any strategy — paper Fig. 11) and arbitrary client scenarios
+    (participation sampling, outages, heterogeneous schedules).
+
+    RNG streams are split by concern: ``rng_idx`` drives public-subset
+    selection, ``rng_part`` drives participation sampling, ``rng``
+    remains for strategy payload transforms.  Runs that differ only in
+    scenario therefore see identical P^t sequences, making their
+    communication ledgers directly comparable.
+
+    ``track_local_caches=True`` additionally maintains every client's
+    mirrored local cache (signals + queue for participants, catch-up
+    packages for returning stragglers) so tests can assert the Alg. 2/3
+    byte-identity invariant; it is off by default because the simulation
+    itself only needs the global cache.
+    """
+
+    def __init__(self, cfg: FLConfig, strategy: Strategy,
+                 cache_duration: int = 0, use_cache: Optional[bool] = None,
+                 probabilistic_expiry: bool = False,
+                 scenario: Optional[Scenario] = None,
+                 track_local_caches: bool = False):
+        self.cfg = cfg
+        self.strategy = strategy
+        self.D = cache_duration
+        self.probabilistic_expiry = probabilistic_expiry
+        self.use_cache = strategy.uses_cache if use_cache is None else use_cache
+        if self.D == 0:
+            self.use_cache = self.use_cache and False
+        self.scenario = scenario or Scenario.from_participation_rate(cfg.participation)
+        self.track_local_caches = track_local_caches
+        self.rng = np.random.default_rng(cfg.seed)
+        self.rng_idx = np.random.default_rng([cfg.seed, 17])
+        self.rng_part = np.random.default_rng([cfg.seed, 29])
+        self._setup()
+
+    # ------------------------------------------------------------------
+    def _setup(self) -> None:
+        c = self.cfg
+        data = make_public_private(c.private_size, c.public_size, c.n_classes,
+                                   c.dim, seed=c.seed,
+                                   cluster_scale=c.cluster_scale, noise=c.noise)
+        self.data = data
+        parts = dirichlet_partition(data["y_private"], c.n_clients, c.alpha,
+                                    seed=c.seed)
+        self.xs, self.ys, self.mask = map(
+            jnp.asarray, pad_client_shards(data["x_private"], data["y_private"], parts))
+        tparts = dirichlet_partition(data["y_test"], c.n_clients, c.alpha,
+                                     seed=c.seed + 7)
+        self.xts, self.yts, self.tmask = map(
+            jnp.asarray, pad_client_shards(data["x_test"], data["y_test"], tparts))
+        self.x_pub = jnp.asarray(data["x_public"])
+        self.x_test = jnp.asarray(data["x_test"])
+        self.y_test = jnp.asarray(data["y_test"])
+
+        key = jax.random.PRNGKey(c.seed)
+        keys = jax.random.split(key, c.n_clients + 1)
+        self.client_params = jax.vmap(
+            lambda k: init_mlp(k, c.dim, c.n_classes, c.hidden, c.mlp_depth))(keys[:-1])
+        self.server_params = init_mlp(keys[-1], c.dim, c.n_classes, c.hidden, c.mlp_depth)
+
+        # Appendix-D validation splits: 10% of public for the server proxy,
+        # 10% of each client's private shard for the client proxy
+        n_pub_val = max(c.public_size // 10, 10)
+        self.pub_val_idx = jnp.asarray(
+            np.random.default_rng(c.seed + 99).choice(
+                c.public_size, n_pub_val, replace=False))
+        val_cut = jnp.maximum((jnp.sum(self.mask, 1) * 0.9).astype(jnp.int32), 1)
+        pos = jnp.arange(self.mask.shape[1])[None, :]
+        self.val_mask = jnp.logical_and(self.mask, pos >= val_cut[:, None])
+        self.train_mask = jnp.logical_and(self.mask, pos < val_cut[:, None])
+        self.last_teacher_val: Optional[jnp.ndarray] = None
+
+        self.cache_g = cache_lib.init_cache(c.public_size, c.n_classes)
+        self.local_caches: List[cache_lib.CacheState] = [
+            cache_lib.init_cache(c.public_size, c.n_classes)
+            for _ in range(c.n_clients)
+        ] if self.track_local_caches else []
+        self.prev_teacher: Optional[Tuple[np.ndarray, jnp.ndarray]] = None  # (idx, z)
+        self.last_sync = np.full(c.n_clients, 0, np.int64)  # last participated round
+        self.n_params = sum(x.size for x in jax.tree_util.tree_leaves(self.server_params))
+
+        het = self.scenario.heterogeneity
+        if het is not None:
+            lr_k, steps_k, max_steps = het.resolve(c.n_clients, c.lr, c.local_steps)
+            self._lr_k = jnp.asarray(lr_k, jnp.float32)
+            self._steps_k = jnp.asarray(steps_k, jnp.int32)
+            self._max_steps = max_steps
+            self._lr_decay = het.lr_decay
+
+    # ------------------------------------------------------------------
+    def run(self, rounds: Optional[int] = None) -> History:
+        c = self.cfg
+        hist = History()
+        T = rounds or c.rounds
+        for t in range(1, T + 1):
+            self._round(t, hist)
+            if t % c.eval_every == 0 or t == T:
+                self._eval(t, hist)
+        hist.final_server_acc = hist.server_acc[-1] if hist.server_acc else 0.0
+        hist.final_client_acc = hist.client_acc[-1] if hist.client_acc else 0.0
+        return hist
+
+    # ------------------------------------------------------------------
+    def _local_train_all(self, params, t: int):
+        c = self.cfg
+        tm = self.train_mask.astype(jnp.float32)
+        if self.scenario.heterogeneity is None:
+            return local_train_v(params, self.xs, self.ys, tm, c.lr, c.local_steps)
+        lr_t = self._lr_k * (self._lr_decay ** (t - 1))
+        return local_train_masked_v(params, self.xs, self.ys, tm,
+                                    lr_t, self._steps_k, self._max_steps)
+
+    # ------------------------------------------------------------------
+    def _round(self, t: int, hist: History) -> None:
+        c, s = self.cfg, self.strategy
+        K = c.n_clients
+        part = self.scenario.participation_mask(t, K, self.rng_part)
+        n_part = int(part.sum())
+
+        # P^t is drawn from its own stream *before* any participation
+        # branching so every scenario sees the identical subset sequence.
+        idx = np.sort(self.rng_idx.choice(c.public_size, c.public_per_round, replace=False))
+        idx_j = jnp.asarray(idx)
+
+        if n_part == 0:  # total outage: nothing moves, the cache ages
+            hist.ledger.record(comm_lib.RoundCost(0.0, 0.0))
+            return
+        part_j = jnp.asarray(part)
+
+        # --- clients: distill on previous teacher, then local training ----
+        new_params = self.client_params
+        if self.prev_teacher is not None:
+            pidx, pteach = self.prev_teacher
+            x_prev = self.x_pub[jnp.asarray(pidx)]
+            if pteach.ndim != 3:  # shared teacher -> per-client (COMET keeps
+                pteach = jnp.broadcast_to(pteach, (K,) + pteach.shape)  # its own)
+            upd = distill_v(new_params, x_prev, pteach, c.lr_dist, c.distill_steps)
+            new_params = _select(upd, new_params, part_j)
+        upd = self._local_train_all(new_params, t)
+        self.client_params = _select(upd, new_params, part_j)
+
+        # --- request list (cache) ----------------------------------------
+        if self.use_cache:
+            miss = cache_lib.miss_mask(
+                self.cache_g, idx_j, t, self.D,
+                probabilistic=self.probabilistic_expiry,
+                key=jax.random.fold_in(jax.random.PRNGKey(c.seed), t)
+                if self.probabilistic_expiry else None)
+        else:
+            miss = jnp.ones(len(idx), bool)
+        n_req = int(jnp.sum(miss))
+
+        # --- uplink: soft-labels on requested samples ---------------------
+        x_round = self.x_pub[idx_j]
+        z_all = predict_v(self.client_params, x_round)  # (K, m, N)
+        z_all = s.transmit(z_all, self.rng)
+        um = s.upload_mask(z_all)
+        # only participating clients contribute
+        zsel = z_all[part_j] if n_part < K else z_all
+        umsel = None if um is None else (um[part_j] if n_part < K else um)
+
+        fresh, per_client = s.aggregate(zsel, umsel, t)
+
+        # --- assemble teacher + cache update ------------------------------
+        cache_prev = self.cache_g  # pre-round state: catch-up covers <= t-1
+        signals = None
+        if self.use_cache:
+            teacher = cache_lib.assemble_teacher(self.cache_g, idx_j, fresh, miss)
+            self.cache_g, signals = cache_lib.update_global_cache(
+                self.cache_g, idx_j, teacher, miss, t)
+        else:
+            teacher = fresh
+
+        # --- server distillation ------------------------------------------
+        self.server_params = distill(self.server_params, x_round, teacher,
+                                     c.lr_dist, c.distill_steps)
+        # App.-D proxy teacher on the public validation split: the clients'
+        # (server-visible) aggregated predictions on held-out public data
+        zv = predict_v(self.client_params, self.x_pub[self.pub_val_idx])
+        self.last_teacher_val = jnp.mean(zv, axis=0)
+        if per_client is not None:  # COMET: personalized teachers
+            if per_client.shape[0] != K:  # partial participation: clients
+                # without a cluster this round fall back to the global teacher
+                base = jnp.broadcast_to(teacher, (K,) + teacher.shape)
+                per_client = base.at[jnp.asarray(np.nonzero(part)[0])].set(per_client)
+            teach_next = per_client
+        else:
+            teach_next = teacher
+        self.prev_teacher = (idx, teach_next)
+
+        # --- catch-up packages for returning stragglers --------------------
+        catch_up = 0.0
+        catch_up_pkgs = {}
+        if self.use_cache:
+            for k in np.nonzero(part)[0]:
+                if self.last_sync[k] < t - 1:
+                    pkg = cache_lib.make_catch_up(cache_prev, int(self.last_sync[k]))
+                    catch_up_pkgs[k] = pkg
+                    catch_up += cache_lib.catch_up_bytes(pkg)
+
+        # --- mirrored local caches (verification mode) ---------------------
+        if self.track_local_caches and self.use_cache:
+            miss_np = np.asarray(miss)
+            queue = cache_lib.pack_queue(teacher, miss_np)
+            dense = cache_lib.unpack_queue(queue, miss, c.n_classes)
+            for k in np.nonzero(part)[0]:
+                ck = self.local_caches[k]
+                if k in catch_up_pkgs:  # returning straggler
+                    ck = cache_lib.apply_catch_up(ck, catch_up_pkgs[k])
+                ck, _ = cache_lib.update_local_cache(ck, idx_j, signals, dense, t)
+                self.local_caches[k] = ck
+
+        # --- communication accounting --------------------------------------
+        uploaded = n_req
+        if umsel is not None:  # Selective-FD: only confident entries ride
+            # uplink; the fraction is over *participating* clients' masks
+            frac = float(jnp.mean(umsel.astype(jnp.float32)))
+            uploaded = n_req * frac
+        cost = comm_lib.distillation_round_cost(
+            n_clients=n_part,
+            n_selected=len(idx),
+            n_requested=int(np.ceil(uploaded)) if umsel is not None else n_req,
+            n_classes=c.n_classes,
+            uplink_bits=s.uplink_bits,
+            downlink_bits=s.downlink_bits,
+            with_cache_signals=self.use_cache,
+            catch_up_down=catch_up,
+        )
+        hist.ledger.record(cost)
+        self.last_sync[part] = t
+
+    # ------------------------------------------------------------------
+    def _eval(self, t: int, hist: History) -> None:
+        sa = float(accuracy(self.server_params, self.x_test, self.y_test,
+                            jnp.ones(len(self.y_test))))
+        ca = float(jnp.mean(accuracy_v(self.client_params, self.xts, self.yts,
+                                       self.tmask.astype(jnp.float32))))
+        hist.rounds.append(t)
+        hist.server_acc.append(sa)
+        hist.client_acc.append(ca)
+        hist.cumulative_mb.append(hist.ledger.cumulative_total / 1e6)
+        # Appendix-D proxies (computable in deployment without test labels)
+        if self.last_teacher_val is not None:
+            hist.server_val_loss.append(float(val_loss_soft(
+                self.server_params, self.x_pub[self.pub_val_idx],
+                self.last_teacher_val)))
+        hist.client_val_loss.append(float(jnp.mean(val_loss_hard_v(
+            self.client_params, self.xs, self.ys,
+            self.val_mask.astype(jnp.float32)))))

@@ -1,0 +1,37 @@
+"""Aggregation-strategy registry: one module per method.
+
+``STRATEGIES`` maps method name -> constructor; ``run_method`` and the
+benchmarks resolve methods through it, so adding a strategy is one new
+module plus one registry line (see ``src/repro/fl/README.md``).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.fl.strategies.base import Strategy
+from repro.fl.strategies.cfd import CFDStrategy
+from repro.fl.strategies.comet import COMETStrategy
+from repro.fl.strategies.dsfl import ERAStrategy
+from repro.fl.strategies.mean import MeanStrategy
+from repro.fl.strategies.scarlet import EnhancedERAStrategy
+from repro.fl.strategies.selective_fd import SelectiveFDStrategy
+
+STRATEGIES: Dict[str, Callable[..., Strategy]] = {
+    "mean": MeanStrategy,
+    "dsfl": ERAStrategy,
+    "scarlet": EnhancedERAStrategy,
+    "cfd": CFDStrategy,
+    "comet": COMETStrategy,
+    "selective_fd": SelectiveFDStrategy,
+}
+
+__all__ = [
+    "Strategy",
+    "MeanStrategy",
+    "ERAStrategy",
+    "EnhancedERAStrategy",
+    "CFDStrategy",
+    "COMETStrategy",
+    "SelectiveFDStrategy",
+    "STRATEGIES",
+]

@@ -1,0 +1,42 @@
+"""Strategy protocol: distillation-method-specific behavior.
+
+A Strategy owns the *method* axis of a run — how client soft-labels are
+transformed on the wire and aggregated into a teacher — and nothing
+else.  Client sampling, outages, and schedule heterogeneity live on the
+orthogonal :mod:`repro.fl.scenarios` axis; the round loop composes the
+two.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Strategy"]
+
+
+class Strategy:
+    """Distillation-method-specific behavior. Subclasses override hooks."""
+
+    name = "base"
+    uses_cache = False
+    uplink_bits = 32.0
+    downlink_bits = 32.0
+
+    def __init__(self, **kw):
+        self.opts = kw
+
+    # uplink payload transform (e.g. CFD quantization). Returns z as the
+    # server sees it.
+    def transmit(self, z_clients: jnp.ndarray, rng: np.random.Generator) -> jnp.ndarray:
+        return z_clients
+
+    # per-(client, sample) upload mask (Selective-FD). True = uploaded.
+    def upload_mask(self, z_clients: jnp.ndarray) -> Optional[jnp.ndarray]:
+        return None
+
+    # aggregate (K, m, N) -> teacher (m, N) used by the SERVER; may also
+    # return per-client teachers (K, m, N) for personalized methods.
+    def aggregate(self, z_clients, upload_mask, t) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        raise NotImplementedError

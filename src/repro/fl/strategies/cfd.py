@@ -1,0 +1,33 @@
+"""CFD (Sattler et al. 2020): quantized uplink soft-labels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.fl.strategies.base import Strategy
+
+__all__ = ["CFDStrategy"]
+
+
+class CFDStrategy(Strategy):
+    """CFD: quantized uplink soft-labels (b_up bits), plain averaging."""
+
+    name = "cfd"
+
+    def __init__(self, b_up: int = 1, b_down: int = 32, **kw):
+        super().__init__(**kw)
+        self.uplink_bits = float(b_up)
+        self.downlink_bits = float(b_down)
+        self.b_up = b_up
+
+    def transmit(self, z, rng):
+        # per-vector min-max uniform quantization to b_up bits
+        levels = 2 ** self.b_up - 1
+        zmin = z.min(axis=-1, keepdims=True)
+        zmax = z.max(axis=-1, keepdims=True)
+        scale = jnp.maximum(zmax - zmin, 1e-9)
+        q = jnp.round((z - zmin) / scale * levels) / levels
+        deq = q * scale + zmin
+        return deq / jnp.maximum(deq.sum(-1, keepdims=True), 1e-9)
+
+    def aggregate(self, z, um, t):
+        return jnp.mean(z, axis=0), None

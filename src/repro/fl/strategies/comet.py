@@ -1,0 +1,43 @@
+"""COMET: clustered co-distillation with per-cluster teachers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.strategies.base import Strategy
+
+__all__ = ["COMETStrategy"]
+
+
+class COMETStrategy(Strategy):
+    """COMET: cluster clients by soft-label similarity; each client
+    distills from its cluster's teacher (+ server uses the global mean)."""
+
+    name = "comet"
+
+    def __init__(self, n_clusters: int = 2, **kw):
+        super().__init__(**kw)
+        self.c = n_clusters
+
+    def aggregate(self, z, um, t):
+        K = z.shape[0]
+        n_clusters = min(self.c, K)
+        feats = np.asarray(z.reshape(K, -1), np.float64)
+        # lightweight k-means
+        rng = np.random.default_rng(1234 + t)
+        cent = feats[rng.choice(K, n_clusters, replace=False)]
+        for _ in range(10):
+            d = ((feats[:, None] - cent[None]) ** 2).sum(-1)
+            assign = d.argmin(1)
+            for j in range(n_clusters):
+                sel = feats[assign == j]
+                if len(sel):
+                    cent[j] = sel.mean(0)
+        assign = jnp.asarray(assign)
+        one = jax.nn.one_hot(assign, n_clusters, dtype=z.dtype)      # (K, c)
+        csum = jnp.einsum("kc,kmn->cmn", one, z)
+        cnt = jnp.maximum(one.sum(0), 1.0)[:, None, None]
+        cteach = csum / cnt                                           # (c, m, N)
+        per_client = cteach[assign]                                   # (K, m, N)
+        return jnp.mean(z, axis=0), per_client

@@ -1,0 +1,18 @@
+"""DS-FL (Itahara et al. 2020): ERA temperature-softmax sharpening."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import era as era_lib
+from repro.fl.strategies.base import Strategy
+
+__all__ = ["ERAStrategy"]
+
+
+class ERAStrategy(Strategy):
+    """DS-FL: temperature-softmax sharpening of the average."""
+
+    name = "dsfl"
+
+    def aggregate(self, z, um, t):
+        return era_lib.era(jnp.mean(z, axis=0), self.opts.get("T", 0.1)), None

@@ -1,0 +1,15 @@
+"""Plain soft-label averaging (no sharpening) — the FD baseline."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.fl.strategies.base import Strategy
+
+__all__ = ["MeanStrategy"]
+
+
+class MeanStrategy(Strategy):
+    name = "mean"
+
+    def aggregate(self, z, um, t):
+        return jnp.mean(z, axis=0), None

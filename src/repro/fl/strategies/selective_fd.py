@@ -1,0 +1,35 @@
+"""Selective-FD: confidence-gated uploads."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import era as era_lib
+from repro.fl.strategies.base import Strategy
+
+__all__ = ["SelectiveFDStrategy"]
+
+
+class SelectiveFDStrategy(Strategy):
+    """Selective-FD: clients upload only confident (low-entropy)
+    soft-labels; the server averages over uploaders per sample."""
+
+    name = "selective_fd"
+
+    def __init__(self, tau_client: float = 0.0625, **kw):
+        super().__init__(**kw)
+        self.tau = tau_client
+
+    def upload_mask(self, z):
+        # normalized entropy in [0,1]; upload when confident
+        N = z.shape[-1]
+        h = era_lib.entropy(z) / jnp.log(N)
+        return h <= (1.0 - self.tau)
+
+    def aggregate(self, z, um, t):
+        w = um.astype(z.dtype)[..., None]
+        num = jnp.sum(z * w, axis=0)
+        den = jnp.maximum(jnp.sum(w, axis=0), 1e-9)
+        teacher = num / den
+        # samples nobody uploaded: fall back to plain mean
+        empty = (jnp.sum(um, axis=0) == 0)[:, None]
+        return jnp.where(empty, jnp.mean(z, axis=0), teacher), None

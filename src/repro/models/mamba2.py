@@ -90,10 +90,13 @@ def ssd_chunked(
 
     # intra-chunk (dual / attention-like) term
     cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                 # (B,nc,Q,Q)
-    decay = jnp.exp(a_cs[:, :, :, None] - a_cs[:, :, None, :])  # (B,nc,i,j,nh)
     ii = jnp.arange(chunk)
     mask = ii[:, None] >= ii[None, :]
-    att = cb[..., None] * decay * mask[None, None, :, :, None]  # (B,nc,i,j,nh)
+    # mask BEFORE exp: for i<j the exponent is positive and can overflow
+    # to inf, and inf * 0 after masking poisons the chunk with NaNs
+    diff = jnp.where(mask[None, None, :, :, None],
+                     a_cs[:, :, :, None] - a_cs[:, :, None, :], -jnp.inf)
+    att = cb[..., None] * jnp.exp(diff)                        # (B,nc,i,j,nh)
     y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, x_dt)
 
     # chunk states

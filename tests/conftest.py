@@ -1,0 +1,109 @@
+"""Shared test configuration.
+
+Guards hypothesis-based modules: when `hypothesis` is not installed,
+a minimal stub is injected into ``sys.modules`` so that
+
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra import numpy as hnp
+
+still import at collection time, and every ``@given``-decorated test
+skips when it runs (the stub plays the role ``pytest.importorskip``
+would, which can't be used directly since it would find the stub) — the
+suite degrades to *skips* instead of collection errors.  Plain
+(non-property) tests in the same modules keep running.  With hypothesis
+installed the stub is never created and everything runs for real.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+import pytest
+
+try:
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+class _StubStrategy:
+    """Stands in for any hypothesis SearchStrategy at collection time."""
+
+    def __call__(self, *a, **k):
+        return self
+
+    def map(self, f):
+        return self
+
+    def filter(self, f):
+        return self
+
+    def flatmap(self, f):
+        return self
+
+    def example(self):
+        pytest.skip("hypothesis is not installed")
+
+
+def _stub_strategy_factory(*a, **k):
+    return _StubStrategy()
+
+
+def _stub_given(*_a, **_k):
+    def deco(fn):
+        # *args-only signature: pytest must not treat the hypothesis
+        # arguments of the wrapped function as fixtures.  (Can't use
+        # pytest.importorskip here: it would find our own stub.)
+        def shim(*args, **kwargs):
+            pytest.skip("hypothesis is not installed")
+
+        shim.__name__ = getattr(fn, "__name__", "hypothesis_test")
+        shim.__doc__ = getattr(fn, "__doc__", None)
+        shim.__module__ = getattr(fn, "__module__", __name__)
+        shim.pytestmark = list(getattr(fn, "pytestmark", []))
+        return shim
+
+    return deco
+
+
+def _stub_settings(*a, **_k):
+    if a and callable(a[0]):  # bare @settings
+        return a[0]
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def _install_hypothesis_stub() -> None:
+    root = types.ModuleType("hypothesis")
+    root.given = _stub_given
+    root.settings = _stub_settings
+    root.assume = lambda *a, **k: True
+    root.note = lambda *a, **k: None
+    root.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    root.__getattr__ = lambda name: _stub_strategy_factory
+
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.__getattr__ = lambda name: _stub_strategy_factory
+
+    extra = types.ModuleType("hypothesis.extra")
+    extra_numpy = types.ModuleType("hypothesis.extra.numpy")
+    extra_numpy.__getattr__ = lambda name: _stub_strategy_factory
+
+    root.strategies = strategies
+    root.extra = extra
+    extra.numpy = extra_numpy
+
+    sys.modules["hypothesis"] = root
+    sys.modules["hypothesis.strategies"] = strategies
+    sys.modules["hypothesis.extra"] = extra
+    sys.modules["hypothesis.extra.numpy"] = extra_numpy
+
+
+if not HAVE_HYPOTHESIS:
+    _install_hypothesis_stub()

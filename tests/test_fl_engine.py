@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.fl.engine import FLConfig, run_method
+from repro.fl.engine import FLConfig, STRATEGIES, run_method
 
 CFG = FLConfig(
     n_clients=6, n_classes=6, dim=12, rounds=20, local_steps=3,
@@ -10,6 +10,27 @@ CFG = FLConfig(
     private_size=600, alpha=0.05, cluster_scale=2.0, noise=2.0,
     eval_every=10, seed=0, hidden=32,
 )
+
+TINY = FLConfig(
+    n_clients=4, n_classes=4, dim=8, rounds=2, local_steps=2,
+    distill_steps=2, public_size=60, public_per_round=12,
+    private_size=80, alpha=0.5, eval_every=1, seed=0, hidden=16,
+)
+
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_strategy_registry_smoke(name):
+    """Every registered strategy runs 2 rounds and yields finite metrics."""
+    h = run_method(name, TINY, rounds=2, cache_duration=3)
+    d = h.as_dict()
+    assert len(h.rounds) == 2
+    for key in ("server_acc", "client_acc", "cumulative_mb",
+                "server_val_loss", "client_val_loss"):
+        vals = d[key]
+        assert len(vals) > 0, (name, key)
+        assert np.isfinite(vals).all(), (name, key)
+    assert np.isfinite(list(d["comm"].values())).all(), name
+    assert h.ledger.cumulative_total > 0, name
 
 
 def test_scarlet_learns_and_saves_comm():

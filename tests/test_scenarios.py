@@ -1,0 +1,168 @@
+"""Scenario subsystem: participation/outage composition, heterogeneous
+schedules, the partial-uplink invariant, and cache catch-up identity
+(paper §III-D) through the full engine."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.fl import (
+    FederatedDistillation,
+    FLConfig,
+    Heterogeneity,
+    Outage,
+    Participation,
+    Scenario,
+    bernoulli_participation,
+    fixed_fraction,
+    run_method,
+)
+from repro.fl.strategies import STRATEGIES
+
+CFG = FLConfig(
+    n_clients=4, n_classes=4, dim=8, rounds=6, local_steps=2,
+    distill_steps=2, public_size=60, public_per_round=12,
+    private_size=80, alpha=0.5, eval_every=3, seed=0, hidden=16,
+)
+ROUNDS = CFG.rounds
+D = 5
+
+
+def _run(scenario=None, track=False):
+    fd = FederatedDistillation(
+        CFG, STRATEGIES["scarlet"](beta=1.5), cache_duration=D,
+        scenario=scenario, track_local_caches=track)
+    hist = fd.run()
+    return fd, hist
+
+
+_FULL_UPLINK = None
+
+
+def _full_uplink():
+    """Full-participation baseline ledger (computed once per session)."""
+    global _FULL_UPLINK
+    if _FULL_UPLINK is None:
+        _, hist = _run()
+        _FULL_UPLINK = hist.ledger.cumulative_uplink
+    return _FULL_UPLINK
+
+
+# --- mask semantics ---------------------------------------------------------
+
+def test_fixed_fraction_mask_exact_count():
+    rng = np.random.default_rng(0)
+    for rate, expect in ((0.5, 2), (0.25, 1), (1.0, 4), (0.01, 1)):
+        m = Scenario(participation=fixed_fraction(rate)).participation_mask(1, 4, rng)
+        assert m.sum() == expect, rate
+
+
+def test_outage_overrides_participation():
+    sc = Scenario(outages=(Outage(0, 2, 4),))
+    rng = np.random.default_rng(0)
+    assert sc.participation_mask(1, 3, rng)[0]
+    for t in (2, 3, 4):
+        assert not sc.participation_mask(t, 3, rng)[0]
+    assert sc.participation_mask(5, 3, rng)[0]
+
+
+def test_empty_bernoulli_draw_conscripts_available_client():
+    sc = Scenario(participation=bernoulli_participation(0.0))
+    m = sc.participation_mask(1, 4, np.random.default_rng(0))
+    assert m.sum() == 1
+    # ...unless everyone is offline: then the round is truly empty
+    sc = Scenario(participation=bernoulli_participation(0.0),
+                  outages=tuple(Outage(k, 1, 1) for k in range(4)))
+    m = sc.participation_mask(1, 4, np.random.default_rng(0))
+    assert m.sum() == 0
+
+
+def test_total_outage_round_costs_nothing_and_run_survives():
+    sc = Scenario(outages=tuple(Outage(k, 3, 3) for k in range(CFG.n_clients)))
+    _, hist = _run(sc)
+    assert hist.ledger.rounds[2].uplink == 0.0
+    assert hist.ledger.rounds[2].downlink == 0.0
+    assert np.isfinite(hist.final_server_acc)
+
+
+# --- heterogeneous schedules -----------------------------------------------
+
+def test_heterogeneous_schedules_run_and_zero_steps_freeze_client():
+    het = Heterogeneity(local_steps=(0, 1, 2, 4), lr_scale=(1.0, 0.5, 1.0, 2.0),
+                        lr_decay=0.9)
+    fd, hist = _run(Scenario(heterogeneity=het))
+    assert np.isfinite(hist.final_server_acc)
+    assert np.isfinite(hist.client_val_loss).all()
+
+
+def test_heterogeneity_rejects_wrong_length():
+    with pytest.raises(ValueError):
+        Heterogeneity(local_steps=(1, 2)).resolve(4, 0.1, 5)
+
+
+# --- strategy x scenario orthogonality --------------------------------------
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_any_strategy_accepts_any_scenario(name):
+    sc = Scenario(participation=fixed_fraction(0.5), outages=(Outage(0, 2, 3),))
+    h = run_method(name, CFG, rounds=4, cache_duration=D, scenario=sc)
+    assert np.isfinite(h.final_server_acc)
+
+
+# --- property: partial uplink never exceeds full participation --------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    kind=st.sampled_from(["fraction", "bernoulli"]),
+    rate=st.floats(0.1, 1.0),
+    part_seed=st.integers(0, 2**31 - 1),
+    outage=st.tuples(st.integers(0, 3), st.integers(1, ROUNDS),
+                     st.integers(0, ROUNDS)),
+)
+def test_partial_uplink_never_exceeds_full(kind, rate, part_seed, outage):
+    """Any dropout/participation mask yields a ledger whose cumulative
+    uplink bytes never exceed the full-participation ledger's: the
+    public-subset stream is participation-independent, so each refresh
+    is paid by at most as many (and never earlier) clients."""
+    client, start, dur = outage
+    sc = Scenario(participation=Participation(kind, rate),
+                  outages=(Outage(client, start, start + dur),))
+    cfg = FLConfig(**{**CFG.__dict__, "seed": CFG.seed})
+    fd = FederatedDistillation(
+        cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=D, scenario=sc)
+    # vary participation draws without touching the P^t stream
+    fd.rng_part = np.random.default_rng(part_seed)
+    hist = fd.run()
+    assert hist.ledger.cumulative_uplink <= _full_uplink() + 1e-9
+
+
+# --- property: catch-up restores byte-identical caches ----------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    client=st.integers(0, 3),
+    start=st.integers(2, ROUNDS - 1),
+    dur=st.integers(0, 3),
+)
+def test_catch_up_cache_byte_identity(client, start, dur):
+    """A dropped-then-returning client's mirrored cache is byte-identical
+    to the server's global cache after the catch-up package (Alg. 2/3
+    invariant: global cache state fully determines local caches)."""
+    end = min(start + dur, ROUNDS - 1)  # client returns before the run ends
+    sc = Scenario(outages=(Outage(client, start, end),))
+    fd, _ = _run(sc, track=True)
+    assert fd.last_sync[client] == ROUNDS
+    for k in range(CFG.n_clients):
+        ck, cg = fd.local_caches[k], fd.cache_g
+        np.testing.assert_array_equal(np.asarray(ck.values), np.asarray(cg.values))
+        np.testing.assert_array_equal(np.asarray(ck.ts), np.asarray(cg.ts))
+        np.testing.assert_array_equal(np.asarray(ck.present), np.asarray(cg.present))
+
+
+def test_catch_up_accounted_in_downlink():
+    """Returning stragglers cost catch-up downlink bytes."""
+    sc = Scenario(outages=(Outage(0, 2, 4),))
+    _, h_out = _run(sc)
+    _, h_full = _run()
+    # round 5 (index 4) is when client 0 returns and gets the package
+    assert h_out.ledger.rounds[4].downlink > h_full.ledger.rounds[4].downlink
