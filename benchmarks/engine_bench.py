@@ -1,0 +1,71 @@
+"""Engine benchmark: scanned (lax.scan) vs host-loop rounds/sec.
+
+The host loop dispatches dozens of small device programs per round and
+syncs the host every round (participation counts, miss counts, subset
+sampling); the scanned engine compiles the whole run into one XLA
+program.  The gap is therefore dispatch/sync-bound: this benchmark uses
+a deliberately small per-round compute load (1 local step, tiny MLP) so
+the per-round overhead — the thing the scanned engine removes — is what
+gets measured.  Both engines draw from the identical jax key stream
+(``rng_backend="jax"``), so they run the same rounds.
+
+Scenario sweeps and multi-seed runs inherit the scanned numbers: a
+sweep is N independent ``run()`` calls, each one program launch.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks._common import emit
+from repro.fl import FederatedDistillation, FLConfig, ScannedFederatedDistillation
+from repro.fl.strategies import STRATEGIES
+
+ROUNDS = 30
+CLIENT_COUNTS = (10, 50, 200)
+
+
+def _cfg(n_clients: int) -> FLConfig:
+    return FLConfig(
+        n_clients=n_clients, n_classes=10, dim=8, rounds=ROUNDS,
+        local_steps=1, distill_steps=1, public_size=256, public_per_round=24,
+        private_size=200, alpha=0.05, hidden=12, eval_every=10**6, seed=0)
+
+
+def _time_run(engine) -> float:
+    engine.run(ROUNDS)  # warmup: compile everything once
+    t0 = time.perf_counter()
+    engine.run(ROUNDS)
+    return time.perf_counter() - t0
+
+
+def run():
+    rows = []
+    for K in CLIENT_COUNTS:
+        cfg = _cfg(K)
+        host = FederatedDistillation(
+            cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=4,
+            rng_backend="jax")
+        t_host = _time_run(host)
+        scan = ScannedFederatedDistillation(
+            cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=4)
+        t_scan = _time_run(scan)
+        rows.append({
+            "name": f"engine_host_K{K}",
+            "us_per_call": t_host / ROUNDS * 1e6,
+            "derived": f"{ROUNDS / t_host:.1f} rounds/s",
+        })
+        rows.append({
+            "name": f"engine_scan_K{K}",
+            "us_per_call": t_scan / ROUNDS * 1e6,
+            "derived": (f"{ROUNDS / t_scan:.1f} rounds/s, "
+                        f"{t_host / t_scan:.1f}x vs host loop"),
+        })
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ import time
 import traceback
 
 from benchmarks import (
+    engine_bench,
     ext_beyond_paper,
     fig3_cache_sim,
     fig4_era_curves,
@@ -43,6 +44,7 @@ SUITE = {
     "fig16": (fig16_partial_participation, {"rounds": 50}),
     "fig18": (fig18_convergence_proxy, {"rounds": 80}),
     "kernels": (kernels_bench, {}),
+    "engine": (engine_bench, {}),
     "ext": (ext_beyond_paper, {"rounds": 80}),
 }
 

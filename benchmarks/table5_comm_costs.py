@@ -33,9 +33,11 @@ def run():
                 uplink_bits=1.0)
         if method == "selective_fd":
             # ~81% of labels pass the confidence selector (paper: 3.88/4.80)
+            # — the gate masks only the uplink; the server still
+            # broadcasts aggregated labels for every selected sample.
             return comm.distillation_round_cost(
-                n_clients=K, n_selected=m, n_requested=int(m * 0.81),
-                n_classes=N)
+                n_clients=K, n_selected=m, n_up_samples=m * 0.81,
+                n_down_samples=m, n_classes=N)
         raise ValueError(method)
 
     base = per_round("dsfl")

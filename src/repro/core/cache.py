@@ -224,3 +224,27 @@ def catch_up_bytes(pkg: CatchUpPackage, bytes_per_value: float = 4.0) -> float:
     """Downlink cost of a catch-up package (values + indices + ts)."""
     m, n = pkg.values.shape
     return m * n * bytes_per_value + m * 4 + m * 4
+
+
+def catch_up_bytes_device(
+    cache_g: CacheState,
+    last_sync: jnp.ndarray,
+    part: jnp.ndarray,
+    t,
+    bytes_per_value: float = 4.0,
+) -> jnp.ndarray:
+    """Total catch-up downlink bytes for this round, computed densely.
+
+    jit/scan-safe equivalent of ``make_catch_up`` + ``catch_up_bytes``
+    summed over returning stragglers: for each participating client
+    whose ``last_sync`` predates round ``t - 1``, count the global-cache
+    entries newer than its sync point and charge values + index + ts per
+    entry.  ``last_sync``/``part`` are ``(K,)``; ``t`` may be traced.
+    """
+    n_classes = cache_g.num_classes
+    returning = jnp.logical_and(part, last_sync < t - 1)              # (K,)
+    newer = jnp.logical_and(cache_g.present[None, :],
+                            cache_g.ts[None, :] > last_sync[:, None])  # (K, |P|)
+    counts = jnp.sum(newer, axis=1).astype(jnp.float32)
+    per_client = counts * (n_classes * bytes_per_value + 8.0)
+    return jnp.sum(jnp.where(returning, per_client, 0.0))

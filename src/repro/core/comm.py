@@ -14,7 +14,7 @@ analysis, Table V).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 BYTES_F32 = 4.0
 BYTES_INDEX = 4.0
@@ -76,36 +76,86 @@ def soft_label_bytes(n_samples: int, n_classes: int, bits: float = 32.0) -> floa
     return n_samples * n_classes * bits / 8.0
 
 
+def distillation_round_cost_device(
+    *,
+    n_clients,
+    n_selected,
+    n_up_samples,
+    n_down_samples,
+    n_classes: int,
+    uplink_bits: float = 32.0,
+    downlink_bits: float = 32.0,
+    with_cache_signals: bool = False,
+    with_request_list: bool = True,
+    catch_up_down=0.0,
+) -> Tuple[float, float]:
+    """Pure-arithmetic ``(uplink, downlink)`` bytes for one round.
+
+    Every non-static argument may be a python number *or* a traced jnp
+    scalar — this is the cost function the scanned (``lax.scan``) engine
+    evaluates on-device each round; ``distillation_round_cost`` wraps it
+    for the host loop.
+
+    The uplink and downlink *sample counts are split*: confidence-gated
+    methods (Selective-FD) upload fewer samples per client
+    (``n_up_samples``, may be fractional — a per-client average), but the
+    server still broadcasts aggregated labels for every requested sample
+    (``n_down_samples``), so only the uplink shrinks.
+    """
+    up_per_client = soft_label_bytes(n_up_samples, n_classes, uplink_bits)
+    down_per_client = soft_label_bytes(n_down_samples, n_classes, downlink_bits)
+    if with_request_list:
+        down_per_client += n_down_samples * BYTES_INDEX + n_selected * BYTES_INDEX
+    if with_cache_signals:
+        down_per_client += n_selected * BYTES_SIGNAL
+    return n_clients * up_per_client, n_clients * down_per_client + catch_up_down
+
+
 def distillation_round_cost(
     *,
     n_clients: int,
     n_selected: int,
-    n_requested: int,
+    n_requested: Optional[float] = None,
     n_classes: int,
     uplink_bits: float = 32.0,
     downlink_bits: float = 32.0,
     with_cache_signals: bool = False,
     with_request_list: bool = True,
     catch_up_down: float = 0.0,
+    n_up_samples: Optional[float] = None,
+    n_down_samples: Optional[float] = None,
 ) -> RoundCost:
     """Generic per-round cost for distillation-based FL.
 
-    - uplink: each client sends soft-labels for the ``n_requested``
-      samples (``n_selected`` when no cache).
+    - uplink: each client sends soft-labels for ``n_up_samples`` samples
+      (``n_selected`` when no cache; possibly fewer under upload gating).
     - downlink: server broadcasts aggregated soft-labels for
-      ``n_requested`` samples (+ signals over all ``n_selected`` when
+      ``n_down_samples`` samples (+ signals over all ``n_selected`` when
       caching) + the request list, to each client.
+
+    ``n_requested`` is the legacy single-count form (uplink == downlink
+    samples, i.e. no upload gating); pass the split counts explicitly
+    for methods where clients withhold part of the request list.
     """
-    up_per_client = soft_label_bytes(n_requested, n_classes, uplink_bits)
-    down_per_client = soft_label_bytes(n_requested, n_classes, downlink_bits)
-    if with_request_list:
-        down_per_client += n_requested * BYTES_INDEX + n_selected * BYTES_INDEX
-    if with_cache_signals:
-        down_per_client += n_selected * BYTES_SIGNAL
-    return RoundCost(
-        uplink=n_clients * up_per_client,
-        downlink=n_clients * down_per_client + catch_up_down,
+    if n_up_samples is None:
+        n_up_samples = n_requested
+    if n_down_samples is None:
+        n_down_samples = n_requested
+    if n_up_samples is None or n_down_samples is None:
+        raise TypeError("pass n_requested or both n_up_samples/n_down_samples")
+    up, down = distillation_round_cost_device(
+        n_clients=n_clients,
+        n_selected=n_selected,
+        n_up_samples=n_up_samples,
+        n_down_samples=n_down_samples,
+        n_classes=n_classes,
+        uplink_bits=uplink_bits,
+        downlink_bits=downlink_bits,
+        with_cache_signals=with_cache_signals,
+        with_request_list=with_request_list,
+        catch_up_down=catch_up_down,
     )
+    return RoundCost(uplink=float(up), downlink=float(down))
 
 
 def fedavg_round_cost(*, n_clients: int, n_params: int, bits: float = 32.0) -> RoundCost:

@@ -6,6 +6,7 @@ from typing import Optional
 from repro.fl.baselines import FedAvg, Individual
 from repro.fl.config import FLConfig
 from repro.fl.rounds import FederatedDistillation, History
+from repro.fl.scan_engine import ScannedFederatedDistillation
 from repro.fl.scenarios import Scenario
 from repro.fl.strategies import STRATEGIES
 
@@ -22,6 +23,8 @@ def run_method(
     probabilistic_expiry: bool = False,
     scenario: Optional[Scenario] = None,
     track_local_caches: bool = False,
+    engine: str = "host",
+    rng_backend: Optional[str] = None,
     **strategy_kw,
 ) -> History:
     """Run one FL method end-to-end and return its History.
@@ -32,14 +35,32 @@ def run_method(
     ``scenario`` composes participation sampling, client outages, and
     heterogeneous schedules onto any distillation strategy (scenarios
     are ignored by the fedavg/individual baselines).
+
+    ``engine="scan"`` runs the device-resident fused multi-round engine
+    (one ``lax.scan`` program, zero per-round host round-trips; see
+    :mod:`repro.fl.scan_engine`); ``engine="host"`` is the reference
+    Python round loop.  ``rng_backend="jax"`` makes the host loop draw
+    subsets/participation from the scanned engine's key stream so the
+    two are directly comparable.
     """
-    if method == "fedavg":
-        return FedAvg(cfg).run(rounds)
-    if method == "individual":
-        return Individual(cfg).run(rounds)
+    if engine not in ("host", "scan"):
+        raise ValueError(f"unknown engine: {engine!r}")
+    if method in ("fedavg", "individual"):
+        if engine == "scan":
+            raise ValueError(f"{method} is a baseline with no scanned path; "
+                             "use engine='host'")
+        if rng_backend is not None:
+            raise ValueError(f"{method} has no rng_backend knob (baselines "
+                             "draw nothing from the round key stream)")
+        cls = FedAvg if method == "fedavg" else Individual
+        return cls(cfg).run(rounds)
     strat = STRATEGIES[method](**strategy_kw)
-    return FederatedDistillation(cfg, strat, cache_duration=cache_duration,
-                                 use_cache=use_cache,
-                                 probabilistic_expiry=probabilistic_expiry,
-                                 scenario=scenario,
-                                 track_local_caches=track_local_caches).run(rounds)
+    cls = ScannedFederatedDistillation if engine == "scan" else FederatedDistillation
+    kw = dict(cache_duration=cache_duration,
+              use_cache=use_cache,
+              probabilistic_expiry=probabilistic_expiry,
+              scenario=scenario,
+              track_local_caches=track_local_caches)
+    if rng_backend is not None:
+        kw["rng_backend"] = rng_backend
+    return cls(cfg, strat, **kw).run(rounds)

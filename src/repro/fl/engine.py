@@ -38,6 +38,7 @@ from repro.fl.rounds import (
     val_loss_hard_v,
     val_loss_soft,
 )
+from repro.fl.scan_engine import ScannedFederatedDistillation
 from repro.fl.scenarios import (
     Heterogeneity,
     Outage,
@@ -62,6 +63,7 @@ __all__ = [
     "FLConfig",
     "History",
     "FederatedDistillation",
+    "ScannedFederatedDistillation",
     "FedAvg",
     "Individual",
     "run_method",

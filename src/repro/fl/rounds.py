@@ -193,13 +193,21 @@ class FederatedDistillation:
     packages for returning stragglers) so tests can assert the Alg. 2/3
     byte-identity invariant; it is off by default because the simulation
     itself only needs the global cache.
+
+    ``rng_backend="jax"`` draws the P^t subsets and participation masks
+    from a split jax key stream instead of the numpy Generators — the
+    exact same stream the scanned engine
+    (:class:`repro.fl.scan_engine.ScannedFederatedDistillation`) folds
+    on-device, which is what makes host-loop and scanned runs directly
+    comparable (the parity suite relies on it).
     """
 
     def __init__(self, cfg: FLConfig, strategy: Strategy,
                  cache_duration: int = 0, use_cache: Optional[bool] = None,
                  probabilistic_expiry: bool = False,
                  scenario: Optional[Scenario] = None,
-                 track_local_caches: bool = False):
+                 track_local_caches: bool = False,
+                 rng_backend: str = "numpy"):
         self.cfg = cfg
         self.strategy = strategy
         self.D = cache_duration
@@ -209,6 +217,9 @@ class FederatedDistillation:
             self.use_cache = self.use_cache and False
         self.scenario = scenario or Scenario.from_participation_rate(cfg.participation)
         self.track_local_caches = track_local_caches
+        if rng_backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown rng_backend: {rng_backend!r}")
+        self.rng_backend = rng_backend
         self.rng = np.random.default_rng(cfg.seed)
         self.rng_idx = np.random.default_rng([cfg.seed, 17])
         self.rng_part = np.random.default_rng([cfg.seed, 29])
@@ -259,6 +270,8 @@ class FederatedDistillation:
         self.prev_teacher: Optional[Tuple[np.ndarray, jnp.ndarray]] = None  # (idx, z)
         self.last_sync = np.full(c.n_clients, 0, np.int64)  # last participated round
         self.n_params = sum(x.size for x in jax.tree_util.tree_leaves(self.server_params))
+        # per-round key stream shared with the scanned engine (jax mode)
+        self._key_rounds = jax.random.fold_in(jax.random.PRNGKey(c.seed), 43)
 
         het = self.scenario.heterogeneity
         if het is not None:
@@ -282,25 +295,49 @@ class FederatedDistillation:
         return hist
 
     # ------------------------------------------------------------------
-    def _local_train_all(self, params, t: int):
+    def _local_train_all(self, params, t):
+        """``t`` may be a python int (host loop) or traced (scan)."""
         c = self.cfg
         tm = self.train_mask.astype(jnp.float32)
         if self.scenario.heterogeneity is None:
             return local_train_v(params, self.xs, self.ys, tm, c.lr, c.local_steps)
-        lr_t = self._lr_k * (self._lr_decay ** (t - 1))
+        decay = jnp.asarray(self._lr_decay, jnp.float32) ** (
+            jnp.asarray(t, jnp.float32) - 1.0)
+        lr_t = self._lr_k * decay
         return local_train_masked_v(params, self.xs, self.ys, tm,
                                     lr_t, self._steps_k, self._max_steps)
+
+    # ------------------------------------------------------------------
+    def _draw_round(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(participation mask, sorted P^t indices) for round ``t``.
+
+        numpy mode: two dedicated Generators (legacy stream).  jax mode:
+        the per-round fold of ``_key_rounds`` — identical draws to the
+        scanned engine's on-device sampling.
+        """
+        c = self.cfg
+        K = c.n_clients
+        if self.rng_backend == "jax":
+            kt = jax.random.fold_in(self._key_rounds, t)
+            k_idx, k_part = jax.random.split(kt)
+            idx = np.asarray(jnp.sort(jax.random.choice(
+                k_idx, c.public_size, (c.public_per_round,), replace=False)))
+            part = np.asarray(self.scenario.participation_mask_device(
+                k_part, jnp.asarray(self.scenario.offline_mask(t, K))))
+            return part, idx
+        part = self.scenario.participation_mask(t, K, self.rng_part)
+        # P^t is drawn from its own stream *before* any participation
+        # branching so every scenario sees the identical subset sequence.
+        idx = np.sort(self.rng_idx.choice(c.public_size, c.public_per_round,
+                                          replace=False))
+        return part, idx
 
     # ------------------------------------------------------------------
     def _round(self, t: int, hist: History) -> None:
         c, s = self.cfg, self.strategy
         K = c.n_clients
-        part = self.scenario.participation_mask(t, K, self.rng_part)
+        part, idx = self._draw_round(t)
         n_part = int(part.sum())
-
-        # P^t is drawn from its own stream *before* any participation
-        # branching so every scenario sees the identical subset sequence.
-        idx = np.sort(self.rng_idx.choice(c.public_size, c.public_per_round, replace=False))
         idx_j = jnp.asarray(idx)
 
         if n_part == 0:  # total outage: nothing moves, the cache ages
@@ -392,15 +429,23 @@ class FederatedDistillation:
                 self.local_caches[k] = ck
 
         # --- communication accounting --------------------------------------
-        uploaded = n_req
-        if umsel is not None:  # Selective-FD: only confident entries ride
-            # uplink; the fraction is over *participating* clients' masks
-            frac = float(jnp.mean(umsel.astype(jnp.float32)))
-            uploaded = n_req * frac
+        # Selective-FD: the confidence filter masks only the *uplink* —
+        # each client withholds its unconfident entries among the
+        # requested samples — while the server still broadcasts
+        # aggregated labels for every requested sample, so the downlink
+        # count stays at n_req.  Uplink is exact (possibly fractional
+        # per-client average), not a rounded whole-mask fraction.
+        uploaded_up = float(n_req)
+        if umsel is not None:
+            miss_f = jnp.asarray(miss, jnp.float32)
+            uploaded_total = float(jnp.sum(
+                umsel.astype(jnp.float32) * miss_f[None, :]))
+            uploaded_up = uploaded_total / max(n_part, 1)
         cost = comm_lib.distillation_round_cost(
             n_clients=n_part,
             n_selected=len(idx),
-            n_requested=int(np.ceil(uploaded)) if umsel is not None else n_req,
+            n_up_samples=uploaded_up,
+            n_down_samples=n_req,
             n_classes=c.n_classes,
             uplink_bits=s.uplink_bits,
             downlink_bits=s.downlink_bits,

@@ -1,0 +1,288 @@
+"""Device-resident multi-round engine: ``jax.lax.scan`` over rounds.
+
+The host loop in :mod:`repro.fl.rounds` dispatches dozens of device
+programs per round and forces a host sync every round (participation
+counts, miss counts, numpy subset sampling, catch-up packaging).  This
+engine compiles the *entire run* into one XLA program: participation
+sampling, public-subset selection, client distillation + local
+training, strategy aggregation, teacher assembly, global-cache update,
+catch-up and uplink/downlink byte accounting all execute on-device
+inside the scan body, and nothing crosses back to the host until the
+stacked per-round metrics come out at the end.
+
+Parity contract: with ``rng_backend="jax"`` the host loop folds the
+identical per-round key stream (``fold_in(key_rounds, t)`` ->
+``split`` -> subset choice / participation draw), so a scanned run and
+a host-loop run of the same config produce the same ledger, cache
+state, and eval metrics up to float reduction order — asserted by
+``tests/test_scan_parity.py``.
+
+What still requires the host loop:
+
+- ``track_local_caches=True`` (mirrored per-client caches build
+  dynamically-sized catch-up packages — a verification mode, not part
+  of the simulation proper);
+- strategies with host-side state or dynamic shapes
+  (``Strategy.scan_safe = False``, currently COMET's numpy k-means);
+- the numpy RNG streams of legacy runs (``rng_backend="numpy"``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_lib
+from repro.core import comm as comm_lib
+from repro.fl.rounds import (
+    FederatedDistillation,
+    History,
+    _select,
+    accuracy,
+    accuracy_v,
+    distill,
+    distill_v,
+    predict_v,
+    val_loss_hard_v,
+    val_loss_soft,
+)
+
+__all__ = ["ScannedFederatedDistillation"]
+
+
+class ScannedFederatedDistillation(FederatedDistillation):
+    """Scanned (fused multi-round) twin of :class:`FederatedDistillation`.
+
+    Same constructor; ``rng_backend`` is forced to ``"jax"`` (the numpy
+    Generators cannot run under ``lax.scan``).  ``run()`` returns the
+    same :class:`History` the host loop builds, with one ledger entry
+    per round and eval rows on the ``eval_every`` schedule.
+    """
+
+    def __init__(self, *args, **kwargs):
+        kwargs.setdefault("rng_backend", "jax")
+        super().__init__(*args, **kwargs)
+        if self.rng_backend != "jax":
+            raise ValueError("the scanned engine requires rng_backend='jax'")
+        if self.track_local_caches:
+            raise ValueError(
+                "track_local_caches builds dynamically-sized catch-up "
+                "packages — use the host-loop engine for that mode")
+        if not self.strategy.scan_safe:
+            raise ValueError(
+                f"strategy {self.strategy.name!r} is not scan-safe "
+                "(host-side state or dynamic shapes); use the host loop")
+        self._scan_fn = None
+
+    # ------------------------------------------------------------------
+    def _round_device(self, carry, xs):
+        c, s = self.cfg, self.strategy
+        K = c.n_clients
+        t, offline_t, do_eval = xs
+
+        kt = jax.random.fold_in(self._key_rounds, t)
+        k_idx, k_part = jax.random.split(kt)
+        idx = jnp.sort(jax.random.choice(
+            k_idx, c.public_size, (c.public_per_round,), replace=False))
+        part = self.scenario.participation_mask_device(k_part, offline_t)
+        part_f = part.astype(jnp.float32)
+        n_part = jnp.sum(part_f)
+        any_p = n_part > 0
+
+        def gate(new, old):
+            """Keep ``old`` wholesale on total-outage rounds."""
+            return jax.tree_util.tree_map(
+                lambda a, b: jnp.where(any_p, a, b), new, old)
+
+        # --- clients: distill on previous teacher, then local training ----
+        cp = carry["client_params"]
+        x_prev = self.x_pub[carry["prev_idx"]]
+        pteach = jnp.broadcast_to(carry["prev_teacher"],
+                                  (K,) + carry["prev_teacher"].shape)
+        upd = distill_v(cp, x_prev, pteach, c.lr_dist, c.distill_steps)
+        cp = _select(upd, cp, jnp.logical_and(part, carry["have_prev"]))
+        upd = self._local_train_all(cp, t)
+        cp = _select(upd, cp, part)
+
+        # --- request list (cache) ----------------------------------------
+        cache_prev = carry["cache"]
+        if self.use_cache:
+            key_exp = (jax.random.fold_in(jax.random.PRNGKey(c.seed), t)
+                       if self.probabilistic_expiry else None)
+            miss = cache_lib.miss_mask(cache_prev, idx, t, self.D,
+                                       probabilistic=self.probabilistic_expiry,
+                                       key=key_exp)
+        else:
+            miss = jnp.ones(c.public_per_round, bool)
+        miss_f = miss.astype(jnp.float32)
+        n_req = jnp.sum(miss_f)
+
+        # --- uplink + aggregation (fixed shapes, participation-masked) ----
+        x_round = self.x_pub[idx]
+        z_all = predict_v(cp, x_round)                     # (K, m, N)
+        z_all = s.transmit(z_all, None)
+        um = s.upload_mask(z_all)
+        fresh = s.aggregate_masked(z_all, part_f, um, t)
+
+        # --- assemble teacher + cache update ------------------------------
+        cache = cache_prev
+        if self.use_cache:
+            teacher = cache_lib.assemble_teacher(cache_prev, idx, fresh, miss)
+            new_cache, _ = cache_lib.update_global_cache(
+                cache_prev, idx, teacher, miss, t)
+            cache = gate(new_cache, cache_prev)
+        else:
+            teacher = fresh
+
+        # --- server distillation + App.-D proxy teacher -------------------
+        sp = distill(carry["server_params"], x_round, teacher,
+                     c.lr_dist, c.distill_steps)
+        server_params = gate(sp, carry["server_params"])
+        zv = predict_v(cp, self.x_pub[self.pub_val_idx])
+        teacher_val = jnp.where(any_p, jnp.mean(zv, axis=0),
+                                carry["teacher_val"])
+        have_tv = jnp.logical_or(carry["have_tv"], any_p)
+
+        prev_teacher = jnp.where(any_p, teacher, carry["prev_teacher"])
+        prev_idx = jnp.where(any_p, idx, carry["prev_idx"])
+        have_prev = jnp.logical_or(carry["have_prev"], any_p)
+
+        # --- communication accounting (all on-device) ---------------------
+        catch_up = 0.0
+        if self.use_cache:
+            catch_up = cache_lib.catch_up_bytes_device(
+                cache_prev, carry["last_sync"], part, t)
+        n_up = n_req
+        if um is not None:  # Selective-FD: uplink-only confidence gating
+            uploaded_total = jnp.sum(
+                um.astype(jnp.float32) * part_f[:, None] * miss_f[None, :])
+            n_up = uploaded_total / jnp.maximum(n_part, 1.0)
+        uplink, downlink = comm_lib.distillation_round_cost_device(
+            n_clients=n_part,
+            n_selected=float(c.public_per_round),
+            n_up_samples=n_up,
+            n_down_samples=n_req,
+            n_classes=c.n_classes,
+            uplink_bits=s.uplink_bits,
+            downlink_bits=s.downlink_bits,
+            with_cache_signals=self.use_cache,
+            catch_up_down=catch_up,
+        )
+        uplink = jnp.where(any_p, uplink, 0.0)
+        downlink = jnp.where(any_p, downlink, 0.0)
+        last_sync = jnp.where(part, t, carry["last_sync"])
+
+        # --- eval (only on scheduled rounds; lax.cond skips the rest) ------
+        def _eval():
+            sa = accuracy(server_params, self.x_test, self.y_test,
+                          jnp.ones(len(self.y_test)))
+            ca = jnp.mean(accuracy_v(cp, self.xts, self.yts,
+                                     self.tmask.astype(jnp.float32)))
+            sv = val_loss_soft(server_params, self.x_pub[self.pub_val_idx],
+                               teacher_val)
+            cv = jnp.mean(val_loss_hard_v(cp, self.xs, self.ys,
+                                          self.val_mask.astype(jnp.float32)))
+            return sa, ca, sv, cv
+
+        sa, ca, sv, cv = jax.lax.cond(
+            do_eval, _eval, lambda: (jnp.float32(0),) * 4)
+
+        new_carry = dict(
+            client_params=cp,
+            server_params=server_params,
+            cache=cache,
+            prev_teacher=prev_teacher,
+            prev_idx=prev_idx,
+            have_prev=have_prev,
+            teacher_val=teacher_val,
+            have_tv=have_tv,
+            last_sync=last_sync,
+        )
+        ys = dict(uplink=uplink, downlink=downlink,
+                  server_acc=sa, client_acc=ca, server_val=sv, client_val=cv,
+                  have_tv=have_tv)
+        return new_carry, ys
+
+    # ------------------------------------------------------------------
+    def _initial_carry(self):
+        c = self.cfg
+        m = c.public_per_round
+        if self.prev_teacher is not None:
+            pidx, pteach = self.prev_teacher
+            prev_idx = jnp.asarray(pidx, jnp.int32)
+            prev_teacher = jnp.asarray(pteach, jnp.float32)
+            have_prev = jnp.asarray(True)
+        else:
+            prev_idx = jnp.zeros((m,), jnp.int32)
+            prev_teacher = jnp.zeros((m, c.n_classes), jnp.float32)
+            have_prev = jnp.asarray(False)
+        if self.last_teacher_val is not None:
+            teacher_val = jnp.asarray(self.last_teacher_val, jnp.float32)
+            have_tv = jnp.asarray(True)
+        else:
+            teacher_val = jnp.zeros((len(self.pub_val_idx), c.n_classes),
+                                    jnp.float32)
+            have_tv = jnp.asarray(False)
+        return dict(
+            client_params=self.client_params,
+            server_params=self.server_params,
+            cache=self.cache_g,
+            prev_teacher=prev_teacher,
+            prev_idx=prev_idx,
+            have_prev=have_prev,
+            teacher_val=teacher_val,
+            have_tv=have_tv,
+            last_sync=jnp.asarray(self.last_sync, jnp.int32),
+        )
+
+    # ------------------------------------------------------------------
+    def run(self, rounds: Optional[int] = None) -> History:
+        c = self.cfg
+        T = rounds or c.rounds
+        ts = jnp.arange(1, T + 1, dtype=jnp.int32)
+        offline = jnp.asarray(self.scenario.offline_masks(T, c.n_clients))
+        eval_np = np.array([(t % c.eval_every == 0) or (t == T)
+                            for t in range(1, T + 1)])
+        if self._scan_fn is None:
+            self._scan_fn = jax.jit(
+                lambda carry, xs: jax.lax.scan(self._round_device, carry, xs))
+        carry, ys = self._scan_fn(self._initial_carry(),
+                                  (ts, offline, jnp.asarray(eval_np)))
+
+        # persist final device state (parity checks, chained run() calls)
+        self.client_params = carry["client_params"]
+        self.server_params = carry["server_params"]
+        self.cache_g = carry["cache"]
+        self.last_sync = np.asarray(carry["last_sync"]).astype(np.int64)
+        if bool(carry["have_prev"]):
+            self.prev_teacher = (np.asarray(carry["prev_idx"]),
+                                 carry["prev_teacher"])
+        if bool(carry["have_tv"]):
+            self.last_teacher_val = carry["teacher_val"]
+
+        # --- rebuild the host-visible History from the stacked metrics ----
+        up = np.asarray(ys["uplink"], np.float64)
+        down = np.asarray(ys["downlink"], np.float64)
+        cum = np.cumsum(up + down)
+        sa = np.asarray(ys["server_acc"])
+        ca = np.asarray(ys["client_acc"])
+        sv = np.asarray(ys["server_val"])
+        cv = np.asarray(ys["client_val"])
+        have_tv = np.asarray(ys["have_tv"])
+
+        hist = History()
+        for u, d in zip(up, down):
+            hist.ledger.record(comm_lib.RoundCost(float(u), float(d)))
+        for i in np.nonzero(eval_np)[0]:
+            hist.rounds.append(int(i) + 1)
+            hist.server_acc.append(float(sa[i]))
+            hist.client_acc.append(float(ca[i]))
+            hist.cumulative_mb.append(float(cum[i]) / 1e6)
+            if have_tv[i]:
+                hist.server_val_loss.append(float(sv[i]))
+            hist.client_val_loss.append(float(cv[i]))
+        hist.final_server_acc = hist.server_acc[-1] if hist.server_acc else 0.0
+        hist.final_client_acc = hist.client_acc[-1] if hist.client_acc else 0.0
+        return hist

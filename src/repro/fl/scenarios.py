@@ -36,6 +36,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
@@ -73,6 +75,24 @@ class Participation:
             return mask
         if self.kind == "bernoulli":
             return rng.random(n_clients) < self.rate
+        raise ValueError(f"unknown participation kind: {self.kind!r}")
+
+    def sample_device(self, key: jnp.ndarray, n_clients: int) -> jnp.ndarray:
+        """jit/scan-safe twin of :meth:`sample` on a jax PRNG key.
+
+        Same policy semantics, different (jax) RNG stream: runs with
+        ``rng_backend="jax"`` draw from this stream both in the host
+        loop and inside the scanned engine, which is what makes the two
+        engines bit-comparable.
+        """
+        if self.kind == "full":
+            return jnp.ones(n_clients, bool)
+        if self.kind == "fraction":
+            n = min(max(int(round(self.rate * n_clients)), 1), n_clients)
+            sel = jax.random.choice(key, n_clients, (n,), replace=False)
+            return jnp.zeros(n_clients, bool).at[sel].set(True)
+        if self.kind == "bernoulli":
+            return jax.random.uniform(key, (n_clients,)) < self.rate
         raise ValueError(f"unknown participation kind: {self.kind!r}")
 
 
@@ -161,6 +181,33 @@ class Scenario:
             if o.covers(t):
                 off[o.client] = True
         return off
+
+    def offline_masks(self, n_rounds: int, n_clients: int) -> np.ndarray:
+        """``(T, K)`` stacked offline masks for rounds ``1..n_rounds`` —
+        outage windows are static config, so the scanned engine
+        precomputes them once and feeds them as scan inputs."""
+        return np.stack([self.offline_mask(t, n_clients)
+                         for t in range(1, n_rounds + 1)])
+
+    def participation_mask_device(self, key: jnp.ndarray,
+                                  offline: jnp.ndarray) -> jnp.ndarray:
+        """jit/scan-safe twin of :meth:`participation_mask`.
+
+        ``offline`` is this round's ``(K,)`` offline mask (a row of
+        :meth:`offline_masks`).  Conscription mirrors the host loop:
+        when the draw comes up short, the lowest-indexed available
+        clients are added until ``min_participants`` is met (or nobody
+        is left).
+        """
+        n_clients = offline.shape[0]
+        mask = self.participation.sample_device(key, n_clients)
+        mask = jnp.logical_and(mask, jnp.logical_not(offline))
+        deficit = self.min_participants - jnp.sum(mask)
+        candidates = jnp.logical_and(jnp.logical_not(mask),
+                                     jnp.logical_not(offline))
+        rank = jnp.cumsum(candidates)  # 1-based rank among candidates
+        conscript = jnp.logical_and(candidates, rank <= deficit)
+        return jnp.logical_or(mask, conscript)
 
     def participation_mask(self, t: int, n_clients: int,
                            rng: np.random.Generator) -> np.ndarray:

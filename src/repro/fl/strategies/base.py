@@ -23,6 +23,9 @@ class Strategy:
     uses_cache = False
     uplink_bits = 32.0
     downlink_bits = 32.0
+    # True when every hook is jit/scan-traceable (pure jnp, no host RNG
+    # or dynamic shapes): required by the scanned multi-round engine.
+    scan_safe = False
 
     def __init__(self, **kw):
         self.opts = kw
@@ -40,3 +43,14 @@ class Strategy:
     # return per-client teachers (K, m, N) for personalized methods.
     def aggregate(self, z_clients, upload_mask, t) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
         raise NotImplementedError
+
+    # Fixed-shape twin of ``aggregate`` for the scanned engine: the full
+    # (K, m, N) stack plus a float {0,1} participation vector ``part``
+    # (K,) instead of a dynamically-sized subset.  Must equal
+    # ``aggregate(z[part], ...)`` up to float reduction order.  The
+    # default participation-weighted mean is correct for any strategy
+    # whose aggregate is the plain mean.
+    def aggregate_masked(self, z_clients: jnp.ndarray, part: jnp.ndarray,
+                         upload_mask: Optional[jnp.ndarray], t) -> jnp.ndarray:
+        w = part / jnp.maximum(jnp.sum(part), 1.0)
+        return jnp.tensordot(w, z_clients, axes=(0, 0))

@@ -12,6 +12,7 @@ class CFDStrategy(Strategy):
     """CFD: quantized uplink soft-labels (b_up bits), plain averaging."""
 
     name = "cfd"
+    scan_safe = True  # transmit() is deterministic jnp; mean aggregation
 
     def __init__(self, b_up: int = 1, b_down: int = 32, **kw):
         super().__init__(**kw)

@@ -13,6 +13,11 @@ class ERAStrategy(Strategy):
     """DS-FL: temperature-softmax sharpening of the average."""
 
     name = "dsfl"
+    scan_safe = True
 
     def aggregate(self, z, um, t):
         return era_lib.era(jnp.mean(z, axis=0), self.opts.get("T", 0.1)), None
+
+    def aggregate_masked(self, z, part, um, t):
+        zbar = super().aggregate_masked(z, part, None, t)
+        return era_lib.era(zbar, self.opts.get("T", 0.1))

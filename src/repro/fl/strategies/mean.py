@@ -10,6 +10,7 @@ __all__ = ["MeanStrategy"]
 
 class MeanStrategy(Strategy):
     name = "mean"
+    scan_safe = True
 
     def aggregate(self, z, um, t):
         return jnp.mean(z, axis=0), None

@@ -14,6 +14,7 @@ class SelectiveFDStrategy(Strategy):
     soft-labels; the server averages over uploaders per sample."""
 
     name = "selective_fd"
+    scan_safe = True
 
     def __init__(self, tau_client: float = 0.0625, **kw):
         super().__init__(**kw)
@@ -33,3 +34,13 @@ class SelectiveFDStrategy(Strategy):
         # samples nobody uploaded: fall back to plain mean
         empty = (jnp.sum(um, axis=0) == 0)[:, None]
         return jnp.where(empty, jnp.mean(z, axis=0), teacher), None
+
+    def aggregate_masked(self, z, part, um, t):
+        w = (um.astype(z.dtype) * part[:, None])[..., None]   # (K, m, 1)
+        num = jnp.sum(z * w, axis=0)
+        den = jnp.maximum(jnp.sum(w, axis=0), 1e-9)
+        teacher = num / den
+        # samples no participant uploaded: participant-mean fallback
+        empty = (jnp.sum(w, axis=0) < 0.5)
+        fallback = super().aggregate_masked(z, part, None, t)
+        return jnp.where(empty, fallback, teacher)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 _NEG = -1e30
 
 
@@ -74,8 +76,9 @@ def flash_attention(
     window: int = 0,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
+    interpret = resolve_interpret(interpret)
     B, Sq, H, d = q.shape
     _, Sk, Hkv, _ = k.shape
     rep = H // Hkv
@@ -123,7 +126,7 @@ def flash_attention(
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
 def flash_attention_diff(q, k, v, causal=True, window=0,
-                         block_q=128, block_k=128, interpret=True):
+                         block_q=128, block_k=128, interpret=None):
     return flash_attention(q, k, v, causal=causal, window=window,
                            block_q=block_q, block_k=block_k,
                            interpret=interpret)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 _NEG = -1e30
 
 
@@ -56,12 +58,14 @@ def _distill_kernel(l_ref, t_ref, o_ref, m_ref, s_ref, dot_ref, tsum_ref, *, nv:
 @functools.partial(jax.jit, static_argnames=("block_b", "block_v", "interpret"))
 def distill_loss(logits: jnp.ndarray, teacher: jnp.ndarray,
                  block_b: int = 128, block_v: int = 2048,
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: bool | None = None) -> jnp.ndarray:
     """Row-wise soft-target CE. logits/teacher: (B, V) -> (B,).
 
     Padding: vocab pad gets logits=-1e30 (excluded from logsumexp) and
     teacher=0 (no dot contribution); row pad is sliced off.
+    ``interpret=None`` auto-detects the backend (native on TPU).
     """
+    interpret = resolve_interpret(interpret)
     B, V = logits.shape
     b_pad = (-B) % block_b
     v_pad = (-V) % block_v

@@ -19,8 +19,17 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import resolve_interpret
 
 _EPS = 1e-12
+
+# beta rides along as a (1,) array pinned to SMEM: scalar parameters
+# live in scalar memory on TPU (a VMEM/ANY spec for a 1-element vector
+# is not a valid compiled layout), and every grid step reads the same
+# whole array (no blocking).
+_BETA_SPEC = pl.BlockSpec(memory_space=pltpu.SMEM)
 
 
 def _era_kernel(z_ref, beta_ref, o_ref):
@@ -44,8 +53,13 @@ def _era_fused_kernel(z_ref, beta_ref, o_ref, *, k_clients: int):
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def enhanced_era(z_mean: jnp.ndarray, beta, block_b: int = 256,
-                 interpret: bool = True) -> jnp.ndarray:
-    """z_mean: (B, N) -> sharpened (B, N).  N padded to 128 lanes."""
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """z_mean: (B, N) -> sharpened (B, N).  N padded to 128 lanes.
+
+    ``interpret=None`` auto-detects the backend (native on TPU,
+    interpreter elsewhere).
+    """
+    interpret = resolve_interpret(interpret)
     B, N = z_mean.shape
     n_pad = (-N) % 128
     b_pad = (-B) % block_b
@@ -58,7 +72,7 @@ def enhanced_era(z_mean: jnp.ndarray, beta, block_b: int = 256,
         grid=(Bp // block_b,),
         in_specs=[
             pl.BlockSpec((block_b, Np), lambda i: (i, 0)),
-            pl.BlockSpec(memory_space=pl.ANY if False else None),  # scalar broadcast
+            _BETA_SPEC,
         ],
         out_specs=pl.BlockSpec((block_b, Np), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, Np), z_mean.dtype),
@@ -69,8 +83,9 @@ def enhanced_era(z_mean: jnp.ndarray, beta, block_b: int = 256,
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def enhanced_era_fused(z_clients: jnp.ndarray, beta, block_b: int = 128,
-                       interpret: bool = True) -> jnp.ndarray:
+                       interpret: bool | None = None) -> jnp.ndarray:
     """(K, B, N) client soft-labels -> aggregated + sharpened (B, N)."""
+    interpret = resolve_interpret(interpret)
     K, B, N = z_clients.shape
     n_pad = (-N) % 128
     b_pad = (-B) % block_b
@@ -82,7 +97,7 @@ def enhanced_era_fused(z_clients: jnp.ndarray, beta, block_b: int = 128,
         grid=(Bp // block_b,),
         in_specs=[
             pl.BlockSpec((K, block_b, Np), lambda i: (0, i, 0)),
-            pl.BlockSpec(memory_space=None),
+            _BETA_SPEC,
         ],
         out_specs=pl.BlockSpec((block_b, Np), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, Np), z_clients.dtype),

@@ -8,14 +8,10 @@ entry points (``repro.core.era`` / ``repro.core.losses`` with
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import attn_kernel, distill_kernel, era_kernel
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.runtime import default_interpret as _interpret
 
 
 def enhanced_era(z_mean: jnp.ndarray, beta, block_b: int = 256) -> jnp.ndarray:

@@ -1,0 +1,24 @@
+"""Kernel runtime dispatch helpers.
+
+Single source of truth for the interpret-mode decision: Pallas kernels
+compile natively on TPU and fall back to interpreter execution (jnp
+semantics, traceable/jittable) everywhere else.  Kernel modules default
+``interpret=None`` and resolve it here at trace time, so direct callers
+get the right mode for the backend they are actually on instead of
+silently running the interpreter on TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def default_interpret() -> bool:
+    """True when the default backend cannot compile Pallas TPU kernels."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve an ``interpret`` kwarg: ``None`` -> backend detection."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -1,0 +1,148 @@
+"""Parity suite: the scanned (lax.scan) engine vs the host reference loop.
+
+Both engines draw subsets/participation from the identical jax key
+stream (``rng_backend="jax"``), so every round sees the same P^t and
+the same cohort; the remaining differences are float reduction order.
+The ledger is integer-derived (sample counts, byte constants), so it
+must match to float exactness; eval metrics and cache values to
+allclose.
+"""
+import numpy as np
+import pytest
+
+from repro.core import comm
+from repro.fl import (
+    FederatedDistillation,
+    FLConfig,
+    Outage,
+    Scenario,
+    ScannedFederatedDistillation,
+    bernoulli_participation,
+    fixed_fraction,
+    full_participation,
+)
+from repro.fl.strategies import STRATEGIES
+
+CFG = FLConfig(
+    n_clients=4, n_classes=4, dim=8, rounds=4, local_steps=2,
+    distill_steps=2, public_size=60, public_per_round=12,
+    private_size=80, alpha=0.5, eval_every=2, seed=0, hidden=16,
+)
+
+STRATEGY_KW = {
+    "scarlet": dict(beta=1.5),
+    "dsfl": dict(T=0.1),
+    "mean": dict(),
+}
+CACHE_D = {"scarlet": 3, "dsfl": 0, "mean": 0}
+
+PARTICIPATIONS = {
+    "full": Scenario(participation=full_participation()),
+    "bernoulli": Scenario(participation=bernoulli_participation(0.5)),
+}
+
+
+def _pair(name, scenario, **kw):
+    strat_kw = STRATEGY_KW[name]
+    host = FederatedDistillation(
+        CFG, STRATEGIES[name](**strat_kw), cache_duration=CACHE_D[name],
+        scenario=scenario, rng_backend="jax", **kw)
+    scan = ScannedFederatedDistillation(
+        CFG, STRATEGIES[name](**strat_kw), cache_duration=CACHE_D[name],
+        scenario=scenario, **kw)
+    return host, host.run(), scan, scan.run()
+
+
+def _assert_parity(host, h_host, scan, h_scan):
+    # --- per-round ledger: integer-derived, must match exactly ---------
+    assert len(h_host.ledger.rounds) == len(h_scan.ledger.rounds)
+    np.testing.assert_allclose(
+        [r.uplink for r in h_host.ledger.rounds],
+        [r.uplink for r in h_scan.ledger.rounds], rtol=1e-7)
+    np.testing.assert_allclose(
+        [r.downlink for r in h_host.ledger.rounds],
+        [r.downlink for r in h_scan.ledger.rounds], rtol=1e-7)
+    # --- History metrics ----------------------------------------------
+    assert h_host.rounds == h_scan.rounds
+    np.testing.assert_allclose(h_host.server_acc, h_scan.server_acc, atol=1e-5)
+    np.testing.assert_allclose(h_host.client_acc, h_scan.client_acc, atol=1e-5)
+    np.testing.assert_allclose(h_host.cumulative_mb, h_scan.cumulative_mb,
+                               rtol=1e-7)
+    np.testing.assert_allclose(h_host.server_val_loss, h_scan.server_val_loss,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(h_host.client_val_loss, h_scan.client_val_loss,
+                               rtol=1e-4, atol=1e-5)
+    # --- cache state + sync bookkeeping -------------------------------
+    np.testing.assert_array_equal(np.asarray(host.cache_g.present),
+                                  np.asarray(scan.cache_g.present))
+    np.testing.assert_array_equal(np.asarray(host.cache_g.ts),
+                                  np.asarray(scan.cache_g.ts))
+    np.testing.assert_allclose(np.asarray(host.cache_g.values),
+                               np.asarray(scan.cache_g.values), atol=1e-5)
+    np.testing.assert_array_equal(host.last_sync, scan.last_sync)
+
+
+@pytest.mark.parametrize("participation", sorted(PARTICIPATIONS))
+@pytest.mark.parametrize("name", sorted(STRATEGY_KW))
+def test_scanned_engine_matches_host_loop(name, participation):
+    _assert_parity(*_pair(name, PARTICIPATIONS[participation]))
+
+
+def test_scanned_engine_matches_host_loop_with_catch_up():
+    """Outage + partial participation exercises the dense catch-up byte
+    accounting against the host loop's per-package packaging."""
+    sc = Scenario(participation=fixed_fraction(0.5), outages=(Outage(0, 2, 3),))
+    _assert_parity(*_pair("scarlet", sc))
+
+
+def test_scanned_engine_rejects_unsupported_modes():
+    with pytest.raises(ValueError):
+        ScannedFederatedDistillation(CFG, STRATEGIES["comet"]())
+    with pytest.raises(ValueError):
+        ScannedFederatedDistillation(
+            CFG, STRATEGIES["scarlet"](beta=1.5), cache_duration=3,
+            track_local_caches=True)
+    with pytest.raises(ValueError):
+        ScannedFederatedDistillation(
+            CFG, STRATEGIES["scarlet"](beta=1.5), rng_backend="numpy")
+
+
+# ---------------------------------------------------------------------------
+# Selective-FD accounting regression (the downlink-undercount bugfix)
+# ---------------------------------------------------------------------------
+
+def test_selective_fd_downlink_matches_analytic_value():
+    """The confidence gate masks only the uplink: the server still
+    broadcasts aggregated labels for every requested sample, so with no
+    cache every round's downlink is exactly
+    ``n_clients * (m*N*4 + m*4 + m*4)`` bytes — independent of how many
+    labels passed the selector.  (The pre-fix code scaled downlink by
+    the upload fraction too, undercounting it.)
+    """
+    fd = FederatedDistillation(CFG, STRATEGIES["selective_fd"]())
+    hist = fd.run(3)
+    K, m, N = CFG.n_clients, CFG.public_per_round, CFG.n_classes
+    expected_down = K * (m * N * 4.0 + m * 4.0 + m * 4.0)
+    full_up = K * m * N * 4.0
+    for r in hist.ledger.rounds:
+        assert r.downlink == pytest.approx(expected_down)
+        assert r.uplink <= full_up + 1e-9
+    # near-uniform early predictions fail the confidence gate, so some
+    # uplink must actually have been withheld
+    assert hist.ledger.rounds[0].uplink < full_up
+
+
+def test_split_cost_counts_match_legacy_when_equal():
+    legacy = comm.distillation_round_cost(
+        n_clients=10, n_selected=100, n_requested=40, n_classes=10)
+    split = comm.distillation_round_cost(
+        n_clients=10, n_selected=100, n_up_samples=40, n_down_samples=40,
+        n_classes=10)
+    assert legacy.uplink == split.uplink
+    assert legacy.downlink == split.downlink
+    # gated uplink shrinks only the uplink
+    gated = comm.distillation_round_cost(
+        n_clients=10, n_selected=100, n_up_samples=25.5, n_down_samples=40,
+        n_classes=10)
+    assert gated.uplink < split.uplink
+    assert gated.downlink == split.downlink
