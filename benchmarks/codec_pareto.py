@@ -1,0 +1,81 @@
+"""Codec x strategy Pareto frontier: cumulative uplink bytes vs accuracy.
+
+Sweeps the soft-label wire codecs (``repro.compress``) across
+distillation strategies on the scanned engine and emits, per point, the
+cumulative uplink under the ledger's analytic accounting, the final
+server accuracy (the proxy axis of the Pareto), and the uplink
+reduction factor vs the dense fp32 identity codec of the same strategy.
+
+Under SCARLET the cache already shrinks *how many* labels move;
+codecs shrink *how large each label is* — the two compose, and
+``cache_delta+quant8`` (8-bit residuals against the synchronized cache,
+one class dropped via the sum-zero constraint) cuts uplink by
+``32/8 * N/(N-1)`` = 4.4x at N=10 on top of the cache's hit-rate
+savings.
+
+  PYTHONPATH=src python -m benchmarks.codec_pareto [--quick]
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks._common import default_cfg, emit
+
+CODEC_SPECS = (
+    "identity",
+    "quant8",
+    "quant4",
+    "topk2",
+    "cache_delta",
+    "cache_delta+quant8",
+    "cache_delta+quant4",
+)
+
+STRATEGY_KW = {
+    "scarlet": dict(cache_duration=10, beta=1.5),
+    "dsfl": dict(T=0.1),
+}
+
+
+def run(rounds: int = 60, quick: bool = False):
+    from repro.fl import run_method
+
+    if quick:
+        rounds = 12
+    cfg = default_cfg(rounds=rounds)
+    if quick:
+        cfg = dataclasses.replace(cfg, n_clients=6, public_size=400,
+                                  public_per_round=60, private_size=500,
+                                  local_steps=2, distill_steps=2, hidden=24)
+
+    rows = []
+    for strat, kw in STRATEGY_KW.items():
+        base_up = None
+        for spec in CODEC_SPECS:
+            h = run_method(strat, cfg, engine="scan", rounds=rounds,
+                           codec=spec, **kw)
+            up = h.ledger.cumulative_uplink
+            if spec == "identity":
+                base_up = up
+            ratio = base_up / up if up > 0 else float("inf")
+            rows.append({
+                "name": f"codec_pareto_{strat}_{spec.replace('+', '_')}",
+                "us_per_call": 0.0,
+                "derived": (f"cum_up_MB={up / 1e6:.3f};"
+                            f"server_acc={h.final_server_acc:.3f};"
+                            f"uplink_x_vs_identity={ratio:.2f}"),
+            })
+    return rows
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    emit(run(quick=args.quick))
+
+
+if __name__ == "__main__":
+    main()

@@ -22,49 +22,58 @@ from repro.fl.strategies import STRATEGIES
 
 ROUNDS = 30
 CLIENT_COUNTS = (10, 50, 200)
+QUICK_ROUNDS = 8
+QUICK_CLIENT_COUNTS = (10,)
 
 
-def _cfg(n_clients: int) -> FLConfig:
+def _cfg(n_clients: int, rounds: int) -> FLConfig:
     return FLConfig(
-        n_clients=n_clients, n_classes=10, dim=8, rounds=ROUNDS,
+        n_clients=n_clients, n_classes=10, dim=8, rounds=rounds,
         local_steps=1, distill_steps=1, public_size=256, public_per_round=24,
         private_size=200, alpha=0.05, hidden=12, eval_every=10**6, seed=0)
 
 
-def _time_run(engine) -> float:
-    engine.run(ROUNDS)  # warmup: compile everything once
+def _time_run(engine, rounds: int) -> float:
+    engine.run(rounds)  # warmup: compile everything once
     t0 = time.perf_counter()
-    engine.run(ROUNDS)
+    engine.run(rounds)
     return time.perf_counter() - t0
 
 
-def run():
+def run(quick: bool = False):
+    rounds = QUICK_ROUNDS if quick else ROUNDS
+    counts = QUICK_CLIENT_COUNTS if quick else CLIENT_COUNTS
     rows = []
-    for K in CLIENT_COUNTS:
-        cfg = _cfg(K)
+    for K in counts:
+        cfg = _cfg(K, rounds)
         host = FederatedDistillation(
             cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=4,
             rng_backend="jax")
-        t_host = _time_run(host)
+        t_host = _time_run(host, rounds)
         scan = ScannedFederatedDistillation(
             cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=4)
-        t_scan = _time_run(scan)
+        t_scan = _time_run(scan, rounds)
         rows.append({
             "name": f"engine_host_K{K}",
-            "us_per_call": t_host / ROUNDS * 1e6,
-            "derived": f"{ROUNDS / t_host:.1f} rounds/s",
+            "us_per_call": t_host / rounds * 1e6,
+            "derived": f"{rounds / t_host:.1f} rounds/s",
         })
         rows.append({
             "name": f"engine_scan_K{K}",
-            "us_per_call": t_scan / ROUNDS * 1e6,
-            "derived": (f"{ROUNDS / t_scan:.1f} rounds/s, "
+            "us_per_call": t_scan / rounds * 1e6,
+            "derived": (f"{rounds / t_scan:.1f} rounds/s, "
                         f"{t_host / t_scan:.1f}x vs host loop"),
         })
     return rows
 
 
 def main():
-    emit(run())
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    emit(run(quick=args.quick))
 
 
 if __name__ == "__main__":

@@ -9,11 +9,13 @@ Prints ``name,us_per_call,derived`` CSV rows per benchmark.
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
 
 from benchmarks import (
+    codec_pareto,
     engine_bench,
     ext_beyond_paper,
     fig3_cache_sim,
@@ -45,6 +47,7 @@ SUITE = {
     "fig18": (fig18_convergence_proxy, {"rounds": 80}),
     "kernels": (kernels_bench, {}),
     "engine": (engine_bench, {}),
+    "codec_pareto": (codec_pareto, {}),
     "ext": (ext_beyond_paper, {"rounds": 80}),
 }
 
@@ -64,6 +67,9 @@ def main() -> None:
         mod, kw = SUITE[name]
         if args.quick and "rounds" in kw:
             kw = {**kw, "rounds": QUICK_ROUNDS}
+        # modules with a dedicated smoke mode take quick= directly
+        if args.quick and "quick" in inspect.signature(mod.run).parameters:
+            kw = {**kw, "quick": True}
         t0 = time.time()
         try:
             rows = mod.run(**kw)

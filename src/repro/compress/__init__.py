@@ -1,0 +1,12 @@
+"""Soft-label codec subsystem: quantization, sparsification, and
+cache-delta coding with analytic (bit-true) payload accounting.  See
+``repro.compress.codecs`` for the protocol and the registry."""
+from repro.compress.codecs import (  # noqa: F401
+    CODECS,
+    CacheDeltaCodec,
+    Codec,
+    IdentityCodec,
+    QuantCodec,
+    TopKCodec,
+    get_codec,
+)

@@ -1,0 +1,330 @@
+"""Soft-label wire codecs: quantization, sparsification, cache-delta.
+
+The paper's entire value proposition is bytes-on-the-wire, so the wire
+format deserves its own subsystem.  A :class:`Codec` models one lossy
+soft-label payload format with three obligations:
+
+- ``encode(z, ...) -> payload`` / ``decode(payload, ...) -> z_hat``:
+  the wire round trip, pure jnp and fixed-shape (scan-safe — both
+  engines apply codecs inside jitted round bodies);
+- ``roundtrip(z, ...)``: ``decode(encode(z))`` fused where a kernel
+  exists (the quant codecs run the Pallas
+  :func:`repro.kernels.ops.quantize_dequantize` round trip in one VMEM
+  pass);
+- ``payload_bytes(n_samples, n_classes)``: the *analytic* per-client
+  payload size, a pure arithmetic function of counts so the comm ledger
+  stays bit-true in both the host loop and the traced ``lax.scan``
+  engine.
+
+Accounting convention (documented deviation): min-max quantizers charge
+only the value bits (``n * N * bits / 8``), excluding the per-row
+min/scale side info — the same convention the repo (and the paper's
+Table V) already uses for CFD's quantized uplink, which keeps the two
+ledgers comparable.
+
+``CacheDeltaCodec`` is the SCARLET-specific one: clients transmit the
+residual against the synchronized cache entry (``cache.cached_at``)
+instead of the full label.  Since prediction and base both live on the
+simplex the residual sums to zero, so one class is dropped on the wire
+and reconstructed from the constraint — any inner quantizer therefore
+pays for ``N - 1`` classes.
+
+Registry: :func:`get_codec` first parses parameterized specs
+(``"quant6"``, ``"topk4"``) and delta compositions
+(``"cache_delta+quant8"``), then falls back to ``CODECS`` — a name ->
+zero-arg-constructor map, the extension point for custom codecs
+(``CODECS["my_codec"] = MyCodec`` makes ``get_codec("my_codec")`` and
+the ``FLConfig`` codec fields resolve it).
+"""
+from __future__ import annotations
+
+import re
+from typing import Callable, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import comm as comm_lib
+from repro.kernels import ops as kops
+
+__all__ = [
+    "Codec",
+    "IdentityCodec",
+    "QuantCodec",
+    "TopKCodec",
+    "CacheDeltaCodec",
+    "CODECS",
+    "get_codec",
+]
+
+_EPS = 1e-9
+
+
+def _simplex(z: jnp.ndarray) -> jnp.ndarray:
+    """Project decoded labels back onto the simplex (clip + renorm)."""
+    z = jnp.maximum(z, 0.0)
+    return z / jnp.maximum(jnp.sum(z, axis=-1, keepdims=True), _EPS)
+
+
+class Codec:
+    """One soft-label wire format.  Subclasses override the hooks.
+
+    ``z`` is ``(..., N)`` — codecs are applied to ``(K, m, N)`` client
+    stacks on the uplink and ``(m, N)`` teachers on the downlink.
+    ``base``/``present`` carry the synchronized cache entry at the
+    round's request positions (``cache.cached_at``); codecs that don't
+    delta-code ignore them.
+    """
+
+    name = "base"
+    scan_safe = True  # pure jnp, fixed shapes: usable inside lax.scan
+
+    @property
+    def is_identity(self) -> bool:
+        return False
+
+    # wire round trip --------------------------------------------------
+    def encode(self, z: jnp.ndarray, base: Optional[jnp.ndarray] = None,
+               present: Optional[jnp.ndarray] = None):
+        raise NotImplementedError
+
+    def decode(self, payload, base: Optional[jnp.ndarray] = None,
+               present: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def roundtrip(self, z: jnp.ndarray, base: Optional[jnp.ndarray] = None,
+                  present: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """What the receiver sees; fused override point for kernels."""
+        return self.decode(self.encode(z, base, present), base, present)
+
+    # analytic accounting ----------------------------------------------
+    def payload_bytes(self, n_samples, n_classes: int):
+        """Per-client payload bytes for ``n_samples`` labels.
+
+        ``n_samples`` may be a python number or a traced jnp scalar
+        (fractional under upload gating) — arithmetic only.
+        """
+        raise NotImplementedError
+
+
+class IdentityCodec(Codec):
+    """Dense fp32 labels — the no-compression reference point."""
+
+    name = "identity"
+
+    @property
+    def is_identity(self) -> bool:
+        return True
+
+    def encode(self, z, base=None, present=None):
+        return z
+
+    def decode(self, payload, base=None, present=None):
+        return payload
+
+    def roundtrip(self, z, base=None, present=None):
+        return z
+
+    def payload_bytes(self, n_samples, n_classes):
+        return n_samples * n_classes * comm_lib.BYTES_F32
+
+
+class QuantCodec(Codec):
+    """Per-row min-max uniform quantization to ``bits`` bits.
+
+    The transform is exactly CFD's quantizer (Sattler et al.):
+    ``2**bits - 1`` levels spanning each row's [min, max], round to
+    nearest, dequantize.  ``renormalize=True`` (top-level use on
+    probability rows) re-projects the dequantized row onto the simplex;
+    residual use (inside :class:`CacheDeltaCodec`) turns it off.
+
+    ``payload_bytes`` charges value bits only (see the module note on
+    the side-info accounting convention).
+    """
+
+    def __init__(self, bits: int, renormalize: bool = True):
+        if bits < 1:
+            raise ValueError(f"need at least 1 bit, got {bits}")
+        self.bits = int(bits)
+        self.renormalize = renormalize
+        self.name = f"quant{self.bits}"
+
+    def encode(self, z, base=None, present=None):
+        levels = float(2 ** self.bits - 1)
+        zmin = z.min(axis=-1, keepdims=True)
+        zmax = z.max(axis=-1, keepdims=True)
+        scale = jnp.maximum(zmax - zmin, _EPS)
+        q = jnp.round((z - zmin) / scale * levels)
+        return {"q": q, "zmin": zmin, "scale": scale}
+
+    def decode(self, payload, base=None, present=None):
+        levels = float(2 ** self.bits - 1)
+        deq = payload["q"] / levels * payload["scale"] + payload["zmin"]
+        return _simplex(deq) if self.renormalize else deq
+
+    def roundtrip(self, z, base=None, present=None):
+        deq = kops.quantize_dequantize(z, self.bits)
+        return _simplex(deq) if self.renormalize else deq
+
+    def payload_bytes(self, n_samples, n_classes):
+        return n_samples * n_classes * self.bits / 8.0
+
+
+class TopKCodec(Codec):
+    """Keep the ``k`` largest entries per row, zero the rest.
+
+    The wire carries k fp32 values + k class indices per row
+    (``index_bytes`` wide — uint8 suffices for every class count in the
+    paper; pass :func:`repro.core.comm.index_bytes_for` of the class
+    count, default the conservative 4-byte constant).  Top-level use
+    renormalizes the survivors back onto the simplex; residual use
+    (``renormalize=False``) selects by magnitude instead, since
+    residuals are signed.
+    """
+
+    def __init__(self, k: int = 2, renormalize: bool = True,
+                 index_bytes: float = comm_lib.BYTES_INDEX):
+        if k < 1:
+            raise ValueError(f"need k >= 1, got {k}")
+        self.k = int(k)
+        self.renormalize = renormalize
+        self.index_bytes = float(index_bytes)
+        self.name = f"topk{self.k}"
+
+    def encode(self, z, base=None, present=None):
+        score = z if self.renormalize else jnp.abs(z)
+        _, idx = jax.lax.top_k(score, self.k)          # (..., k)
+        values = jnp.take_along_axis(z, idx, axis=-1)
+        # n_classes is the static dense width (a python int at trace
+        # time), carried so decode can scatter without out-of-band state
+        return {"values": values, "indices": idx, "n_classes": z.shape[-1]}
+
+    def decode(self, payload, base=None, present=None):
+        values, idx = payload["values"], payload["indices"]
+        onehot = jax.nn.one_hot(idx, payload["n_classes"], dtype=values.dtype)
+        dense = jnp.sum(values[..., None] * onehot, axis=-2)
+        return _simplex(dense) if self.renormalize else dense
+
+    def payload_bytes(self, n_samples, n_classes):
+        return n_samples * self.k * (comm_lib.BYTES_F32 + self.index_bytes)
+
+
+class CacheDeltaCodec(Codec):
+    """Residual coding against the synchronized soft-label cache.
+
+    SCARLET's cache is mirrored bit-exactly on every client (Alg. 2/3),
+    so both ends of the wire share a prediction base for each request
+    position: the cached entry where one exists (``present`` — including
+    the stale value of an EXPIRED entry awaiting refresh), the uniform
+    prior ``1/N`` where none does.  Clients encode ``z - base`` with the
+    inner codec instead of ``z`` itself; after distillation on cached
+    teachers the residuals are small, so coarse inner quantizers lose
+    far less signal than they would on raw labels.
+
+    Wire-size win: prediction and base both sum to one, so the residual
+    sums to zero — the last class is dropped on the wire and
+    reconstructed from the constraint, making the payload an
+    ``(N-1)/N`` fraction of the inner codec's (exactly
+    ``inner.payload_bytes(n, N - 1)``).
+
+    ``inner`` composes any codec in residual mode (``renormalize=False``
+    — residuals are signed and not on the simplex); identity inner gives
+    pure delta coding (lossless, fp32 residuals, the byte win reduced to
+    the dropped class).
+    """
+
+    def __init__(self, inner: Optional[Codec] = None):
+        self.inner = inner if inner is not None else IdentityCodec()
+        self.name = ("cache_delta" if self.inner.is_identity
+                     else f"cache_delta+{self.inner.name}")
+        self.scan_safe = self.inner.scan_safe
+
+    def _base(self, z, base, present):
+        n = z.shape[-1]
+        if base is None:
+            return jnp.full_like(z, 1.0 / n)
+        if present is not None:
+            base = jnp.where(present[..., None], base, 1.0 / n)
+        return jnp.broadcast_to(base, z.shape)
+
+    def encode(self, z, base=None, present=None):
+        b = self._base(z, base, present)
+        residual = (z - b)[..., :-1]  # last class implied by sum-zero
+        return self.inner.encode(residual)
+
+    def decode(self, payload, base=None, present=None):
+        r = self.inner.decode(payload)
+        r = jnp.concatenate([r, -jnp.sum(r, axis=-1, keepdims=True)], axis=-1)
+        b = self._base(r, base, present)
+        return _simplex(b + r)
+
+    def roundtrip(self, z, base=None, present=None):
+        b = self._base(z, base, present)
+        r = self.inner.roundtrip((z - b)[..., :-1])
+        r = jnp.concatenate([r, -jnp.sum(r, axis=-1, keepdims=True)], axis=-1)
+        return _simplex(b + r)
+
+    def payload_bytes(self, n_samples, n_classes):
+        return self.inner.payload_bytes(n_samples, n_classes - 1)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+# Name -> zero-arg constructor.  The built-in parameterized families
+# (quantB, topkK) are handled by get_codec's spec parser before this
+# map is consulted; register custom codecs here.
+CODECS: Dict[str, Callable[[], Codec]] = {
+    "identity": IdentityCodec,
+    "quant8": lambda: QuantCodec(8),
+    "quant4": lambda: QuantCodec(4),
+    "quant1": lambda: QuantCodec(1),
+    "topk": TopKCodec,
+    "cache_delta": CacheDeltaCodec,
+}
+
+_QUANT_RE = re.compile(r"^quant(\d+)$")
+_TOPK_RE = re.compile(r"^topk(\d*)$")
+
+
+def _make(spec: str, renormalize: bool = True,
+          index_bytes: Optional[float] = None) -> Codec:
+    m = _QUANT_RE.match(spec)
+    if m:
+        return QuantCodec(int(m.group(1)), renormalize=renormalize)
+    m = _TOPK_RE.match(spec)
+    if m:
+        k = int(m.group(1)) if m.group(1) else 2
+        return TopKCodec(k, renormalize=renormalize,
+                         index_bytes=(comm_lib.BYTES_INDEX
+                                      if index_bytes is None else index_bytes))
+    factory = CODECS.get(spec)
+    if factory is not None:
+        return factory()
+    raise ValueError(f"unknown codec spec: {spec!r} "
+                     f"(known: {sorted(CODECS)}, or quantB / topkK)")
+
+
+def get_codec(spec: Union[str, Codec, None], *,
+              index_bytes: Optional[float] = None) -> Codec:
+    """Resolve a codec spec: a Codec instance (returned as-is), ``None``
+    (identity), a parameterized form (``"quant6"``, ``"topk4"``), a
+    delta composition (``"cache_delta+quant8"``), or a ``CODECS``
+    registry name.  ``index_bytes`` sets the per-index wire width of
+    index-bearing codecs (top-k) so it can follow the run's
+    ``FLConfig.index_bytes`` instead of the 4-byte default."""
+    if spec is None:
+        return IdentityCodec()
+    if isinstance(spec, Codec):
+        return spec
+    spec = spec.strip()
+    if spec.startswith("cache_delta"):
+        rest = spec[len("cache_delta"):]
+        if rest == "":
+            return CacheDeltaCodec()
+        if rest.startswith("+"):
+            return CacheDeltaCodec(inner=_make(rest[1:], renormalize=False,
+                                               index_bytes=index_bytes))
+        raise ValueError(f"unknown codec spec: {spec!r}")
+    return _make(spec, index_bytes=index_bytes)

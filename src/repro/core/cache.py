@@ -102,6 +102,20 @@ def request_list(cache: CacheState, idx: jnp.ndarray, t, D: int) -> Tuple[jnp.nd
     return m, idx[m]
 
 
+def cached_at(cache: CacheState, idx: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(values, present) at request positions — the shared prediction
+    base both ends use for cache-delta uplink coding.
+
+    Under Alg.-3 semantics the global cache state fully determines every
+    synchronized local cache, so server and clients agree on these values
+    bit-for-bit (including the *stale* value of an EXPIRED entry, which
+    stays in ``values`` until the refresh overwrites it) — which is what
+    lets clients transmit quantized residuals against them
+    (:class:`repro.compress.CacheDeltaCodec`) instead of full labels.
+    """
+    return cache.values[idx], cache.present[idx]
+
+
 def signals_for_round(cache: CacheState, idx: jnp.ndarray, miss: jnp.ndarray) -> jnp.ndarray:
     """Per-sample signal gamma^t for the selected indices."""
     present = cache.present[idx]

@@ -16,9 +16,26 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 BYTES_F32 = 4.0
 BYTES_INDEX = 4.0
 BYTES_SIGNAL = 0.25  # 2 bits/sample, packed
+
+
+def index_bytes_for(n_items: int) -> float:
+    """Smallest standard unsigned width that can index ``n_items``
+    distinct values (public-sample ids, top-k class positions, ...).
+
+    Public datasets up to 65k samples — every dataset in the paper —
+    only need uint16 request-list/index entries; callers pass the result
+    as ``bytes_index`` instead of the conservative 4-byte default.
+    """
+    if n_items <= 2 ** 8:
+        return 1.0
+    if n_items <= 2 ** 16:
+        return 2.0
+    return 4.0
 
 
 @dataclass
@@ -56,8 +73,6 @@ class CommLedger:
         return self.cumulative_uplink + self.cumulative_downlink
 
     def summary(self) -> Dict[str, float]:
-        import numpy as np
-
         up = np.array([r.uplink for r in self.rounds]) if self.rounds else np.zeros(1)
         down = np.array([r.downlink for r in self.rounds]) if self.rounds else np.zeros(1)
         return {
@@ -88,6 +103,9 @@ def distillation_round_cost_device(
     with_cache_signals: bool = False,
     with_request_list: bool = True,
     catch_up_down=0.0,
+    bytes_index: float = BYTES_INDEX,
+    uplink_codec=None,
+    downlink_codec=None,
 ) -> Tuple[float, float]:
     """Pure-arithmetic ``(uplink, downlink)`` bytes for one round.
 
@@ -101,11 +119,24 @@ def distillation_round_cost_device(
     (``n_up_samples``, may be fractional — a per-client average), but the
     server still broadcasts aggregated labels for every requested sample
     (``n_down_samples``), so only the uplink shrinks.
+
+    ``uplink_codec``/``downlink_codec`` (any :class:`repro.compress.Codec`
+    with a non-identity wire format) replace the flat bits-per-value
+    payload model with the codec's analytic ``payload_bytes`` on that
+    direction; identity/None keeps the legacy ``*_bits`` accounting, so
+    CFD's Table-V byte values are untouched.  Request-list and cache
+    signal bytes are codec-independent (``bytes_index`` per index entry).
     """
-    up_per_client = soft_label_bytes(n_up_samples, n_classes, uplink_bits)
-    down_per_client = soft_label_bytes(n_down_samples, n_classes, downlink_bits)
+    if uplink_codec is not None and not uplink_codec.is_identity:
+        up_per_client = uplink_codec.payload_bytes(n_up_samples, n_classes)
+    else:
+        up_per_client = soft_label_bytes(n_up_samples, n_classes, uplink_bits)
+    if downlink_codec is not None and not downlink_codec.is_identity:
+        down_per_client = downlink_codec.payload_bytes(n_down_samples, n_classes)
+    else:
+        down_per_client = soft_label_bytes(n_down_samples, n_classes, downlink_bits)
     if with_request_list:
-        down_per_client += n_down_samples * BYTES_INDEX + n_selected * BYTES_INDEX
+        down_per_client += n_down_samples * bytes_index + n_selected * bytes_index
     if with_cache_signals:
         down_per_client += n_selected * BYTES_SIGNAL
     return n_clients * up_per_client, n_clients * down_per_client + catch_up_down
@@ -124,6 +155,9 @@ def distillation_round_cost(
     catch_up_down: float = 0.0,
     n_up_samples: Optional[float] = None,
     n_down_samples: Optional[float] = None,
+    bytes_index: float = BYTES_INDEX,
+    uplink_codec=None,
+    downlink_codec=None,
 ) -> RoundCost:
     """Generic per-round cost for distillation-based FL.
 
@@ -154,6 +188,9 @@ def distillation_round_cost(
         with_cache_signals=with_cache_signals,
         with_request_list=with_request_list,
         catch_up_down=catch_up_down,
+        bytes_index=bytes_index,
+        uplink_codec=uplink_codec,
+        downlink_codec=downlink_codec,
     )
     return RoundCost(uplink=float(up), downlink=float(down))
 

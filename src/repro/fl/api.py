@@ -1,6 +1,7 @@
 """Front door: run one FL method end-to-end."""
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 from repro.fl.baselines import FedAvg, Individual
@@ -25,6 +26,8 @@ def run_method(
     track_local_caches: bool = False,
     engine: str = "host",
     rng_backend: Optional[str] = None,
+    codec: Optional[str] = None,
+    downlink_codec: Optional[str] = None,
     **strategy_kw,
 ) -> History:
     """Run one FL method end-to-end and return its History.
@@ -42,9 +45,19 @@ def run_method(
     Python round loop.  ``rng_backend="jax"`` makes the host loop draw
     subsets/participation from the scanned engine's key stream so the
     two are directly comparable.
+
+    ``codec`` (uplink) / ``downlink_codec`` select soft-label wire
+    codecs (:mod:`repro.compress` specs, e.g. ``"quant8"``,
+    ``"cache_delta+quant8"``) — shorthand for setting the corresponding
+    ``FLConfig`` fields; the ledger switches to the codec's analytic
+    payload accounting on that direction.
     """
     if engine not in ("host", "scan"):
         raise ValueError(f"unknown engine: {engine!r}")
+    if codec is not None:
+        cfg = dataclasses.replace(cfg, uplink_codec=codec)
+    if downlink_codec is not None:
+        cfg = dataclasses.replace(cfg, downlink_codec=downlink_codec)
     if method in ("fedavg", "individual"):
         if engine == "scan":
             raise ValueError(f"{method} is a baseline with no scanned path; "
@@ -52,6 +65,9 @@ def run_method(
         if rng_backend is not None:
             raise ValueError(f"{method} has no rng_backend knob (baselines "
                              "draw nothing from the round key stream)")
+        if cfg.uplink_codec != "identity" or cfg.downlink_codec != "identity":
+            raise ValueError(f"{method} exchanges parameters, not "
+                             "soft-labels; codecs do not apply")
         cls = FedAvg if method == "fedavg" else Individual
         return cls(cfg).run(rounds)
     strat = STRATEGIES[method](**strategy_kw)

@@ -25,3 +25,11 @@ class FLConfig:
     noise: float = 1.0           # within-class noise (task difficulty)
     seed: int = 0
     eval_every: int = 10
+    # wire codecs (repro.compress specs, e.g. "quant8", "cache_delta+quant8");
+    # "identity" keeps the legacy dense-fp32 payloads and ledger values
+    uplink_codec: str = "identity"
+    downlink_codec: str = "identity"
+    # request-list/index entry width in bytes (comm.index_bytes_for picks
+    # 2 for public datasets <= 65k samples; 4 is the legacy conservative
+    # default that all pinned ledger values assume)
+    index_bytes: float = 4.0

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compress import get_codec
 from repro.core import cache as cache_lib
 from repro.core import comm as comm_lib
 from repro.data.synthetic import dirichlet_partition, make_public_private, pad_client_shards
@@ -200,6 +201,16 @@ class FederatedDistillation:
     (:class:`repro.fl.scan_engine.ScannedFederatedDistillation`) folds
     on-device, which is what makes host-loop and scanned runs directly
     comparable (the parity suite relies on it).
+
+    Wire codecs (``cfg.uplink_codec`` / ``cfg.downlink_codec``,
+    :mod:`repro.compress`) apply the lossy encode->decode round trip to
+    what each direction actually carries — client soft-labels after
+    ``Strategy.transmit`` on the uplink, the freshly aggregated teacher
+    on the downlink — and switch the ledger to the codec's analytic
+    payload bytes.  The decoded downlink teacher is also what the server
+    distills on and what enters the global cache, keeping server and
+    client caches bit-identical (clients can only cache what the wire
+    delivered).
     """
 
     def __init__(self, cfg: FLConfig, strategy: Strategy,
@@ -220,6 +231,10 @@ class FederatedDistillation:
         if rng_backend not in ("numpy", "jax"):
             raise ValueError(f"unknown rng_backend: {rng_backend!r}")
         self.rng_backend = rng_backend
+        self.codec_up = get_codec(cfg.uplink_codec,
+                                  index_bytes=cfg.index_bytes)
+        self.codec_down = get_codec(cfg.downlink_codec,
+                                    index_bytes=cfg.index_bytes)
         self.rng = np.random.default_rng(cfg.seed)
         self.rng_idx = np.random.default_rng([cfg.seed, 17])
         self.rng_part = np.random.default_rng([cfg.seed, 29])
@@ -367,17 +382,30 @@ class FederatedDistillation:
         else:
             miss = jnp.ones(len(idx), bool)
         n_req = int(jnp.sum(miss))
+        # shared delta-coding base: the synchronized cache at P^t (pre-update)
+        base, base_present = cache_lib.cached_at(self.cache_g, idx_j)
 
         # --- uplink: soft-labels on requested samples ---------------------
         x_round = self.x_pub[idx_j]
         z_all = predict_v(self.client_params, x_round)  # (K, m, N)
         z_all = s.transmit(z_all, self.rng)
+        if not self.codec_up.is_identity:  # lossy wire: what the server sees
+            z_all = self.codec_up.roundtrip(z_all, base=base,
+                                            present=base_present)
         um = s.upload_mask(z_all)
         # only participating clients contribute
         zsel = z_all[part_j] if n_part < K else z_all
         umsel = None if um is None else (um[part_j] if n_part < K else um)
 
         fresh, per_client = s.aggregate(zsel, umsel, t)
+        if not self.codec_down.is_identity:
+            # clients receive (and cache) the decoded broadcast; the server
+            # uses the same decoded teacher so both caches stay bit-identical
+            fresh = self.codec_down.roundtrip(fresh, base=base,
+                                              present=base_present)
+            if per_client is not None:
+                per_client = self.codec_down.roundtrip(
+                    per_client, base=base, present=base_present)
 
         # --- assemble teacher + cache update ------------------------------
         cache_prev = self.cache_g  # pre-round state: catch-up covers <= t-1
@@ -399,8 +427,8 @@ class FederatedDistillation:
         if per_client is not None:  # COMET: personalized teachers
             if per_client.shape[0] != K:  # partial participation: clients
                 # without a cluster this round fall back to the global teacher
-                base = jnp.broadcast_to(teacher, (K,) + teacher.shape)
-                per_client = base.at[jnp.asarray(np.nonzero(part)[0])].set(per_client)
+                fallback = jnp.broadcast_to(teacher, (K,) + teacher.shape)
+                per_client = fallback.at[jnp.asarray(np.nonzero(part)[0])].set(per_client)
             teach_next = per_client
         else:
             teach_next = teacher
@@ -451,6 +479,9 @@ class FederatedDistillation:
             downlink_bits=s.downlink_bits,
             with_cache_signals=self.use_cache,
             catch_up_down=catch_up,
+            bytes_index=c.index_bytes,
+            uplink_codec=self.codec_up,
+            downlink_codec=self.codec_down,
         )
         hist.ledger.record(cost)
         self.last_sync[part] = t

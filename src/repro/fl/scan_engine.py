@@ -5,10 +5,11 @@ programs per round and forces a host sync every round (participation
 counts, miss counts, numpy subset sampling, catch-up packaging).  This
 engine compiles the *entire run* into one XLA program: participation
 sampling, public-subset selection, client distillation + local
-training, strategy aggregation, teacher assembly, global-cache update,
-catch-up and uplink/downlink byte accounting all execute on-device
-inside the scan body, and nothing crosses back to the host until the
-stacked per-round metrics come out at the end.
+training, wire-codec round trips (``repro.compress``), strategy
+aggregation, teacher assembly, global-cache update, catch-up and
+uplink/downlink byte accounting all execute on-device inside the scan
+body, and nothing crosses back to the host until the stacked per-round
+metrics come out at the end.
 
 Parity contract: with ``rng_backend="jax"`` the host loop folds the
 identical per-round key stream (``fold_in(key_rounds, t)`` ->
@@ -74,6 +75,11 @@ class ScannedFederatedDistillation(FederatedDistillation):
             raise ValueError(
                 f"strategy {self.strategy.name!r} is not scan-safe "
                 "(host-side state or dynamic shapes); use the host loop")
+        for codec in (self.codec_up, self.codec_down):
+            if not codec.scan_safe:
+                raise ValueError(
+                    f"codec {codec.name!r} is not scan-safe; use the "
+                    "host loop")
         self._scan_fn = None
 
     # ------------------------------------------------------------------
@@ -118,13 +124,21 @@ class ScannedFederatedDistillation(FederatedDistillation):
             miss = jnp.ones(c.public_per_round, bool)
         miss_f = miss.astype(jnp.float32)
         n_req = jnp.sum(miss_f)
+        # shared delta-coding base: the synchronized cache at P^t (pre-update)
+        base, base_present = cache_lib.cached_at(cache_prev, idx)
 
         # --- uplink + aggregation (fixed shapes, participation-masked) ----
         x_round = self.x_pub[idx]
         z_all = predict_v(cp, x_round)                     # (K, m, N)
         z_all = s.transmit(z_all, None)
+        if not self.codec_up.is_identity:  # lossy wire: what the server sees
+            z_all = self.codec_up.roundtrip(z_all, base=base,
+                                            present=base_present)
         um = s.upload_mask(z_all)
         fresh = s.aggregate_masked(z_all, part_f, um, t)
+        if not self.codec_down.is_identity:  # decoded broadcast (see rounds.py)
+            fresh = self.codec_down.roundtrip(fresh, base=base,
+                                              present=base_present)
 
         # --- assemble teacher + cache update ------------------------------
         cache = cache_prev
@@ -169,6 +183,9 @@ class ScannedFederatedDistillation(FederatedDistillation):
             downlink_bits=s.downlink_bits,
             with_cache_signals=self.use_cache,
             catch_up_down=catch_up,
+            bytes_index=c.index_bytes,
+            uplink_codec=self.codec_up,
+            downlink_codec=self.codec_down,
         )
         uplink = jnp.where(any_p, uplink, 0.0)
         downlink = jnp.where(any_p, downlink, 0.0)

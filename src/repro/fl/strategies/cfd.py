@@ -3,13 +3,22 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.compress import QuantCodec
 from repro.fl.strategies.base import Strategy
 
 __all__ = ["CFDStrategy"]
 
 
 class CFDStrategy(Strategy):
-    """CFD: quantized uplink soft-labels (b_up bits), plain averaging."""
+    """CFD: quantized uplink soft-labels (b_up bits), plain averaging.
+
+    The quantizer is the shared :class:`repro.compress.QuantCodec`
+    (per-vector min-max, simplex renormalization — the exact transform
+    this class used to inline), running through the fused Pallas
+    quantize-dequantize kernel.  Byte accounting stays on the legacy
+    ``uplink_bits`` path (b_up bits/value, Table V), which the identity
+    default of the engine-level codecs leaves untouched.
+    """
 
     name = "cfd"
     scan_safe = True  # transmit() is deterministic jnp; mean aggregation
@@ -19,16 +28,10 @@ class CFDStrategy(Strategy):
         self.uplink_bits = float(b_up)
         self.downlink_bits = float(b_down)
         self.b_up = b_up
+        self._codec = QuantCodec(b_up)
 
     def transmit(self, z, rng):
-        # per-vector min-max uniform quantization to b_up bits
-        levels = 2 ** self.b_up - 1
-        zmin = z.min(axis=-1, keepdims=True)
-        zmax = z.max(axis=-1, keepdims=True)
-        scale = jnp.maximum(zmax - zmin, 1e-9)
-        q = jnp.round((z - zmin) / scale * levels) / levels
-        deq = q * scale + zmin
-        return deq / jnp.maximum(deq.sum(-1, keepdims=True), 1e-9)
+        return self._codec.roundtrip(z)
 
     def aggregate(self, z, um, t):
         return jnp.mean(z, axis=0), None

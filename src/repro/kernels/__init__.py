@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot spots:
 
 - era_kernel:     fused Enhanced-ERA aggregation sharpening (VPU-bound)
+- quant_kernel:   fused min-max quantize-dequantize round trip (the
+                  lossy wire-format simulation used by repro.compress)
 - distill_kernel: soft-target CE over large (LM-vocab) class dims
                   (flash-softmax block accumulation)
 - attn_kernel:    causal GQA flash attention for client forward passes

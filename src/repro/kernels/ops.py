@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels import attn_kernel, distill_kernel, era_kernel
+from repro.kernels import attn_kernel, distill_kernel, era_kernel, quant_kernel
 from repro.kernels.runtime import default_interpret as _interpret
 
 
@@ -26,6 +26,16 @@ def enhanced_era(z_mean: jnp.ndarray, beta, block_b: int = 256) -> jnp.ndarray:
 def enhanced_era_fused(z_clients: jnp.ndarray, beta) -> jnp.ndarray:
     """(K, B, N) -> (B, N): fused client-mean + sharpening."""
     return era_kernel.enhanced_era_fused(z_clients, beta, interpret=_interpret())
+
+
+def quantize_dequantize(z: jnp.ndarray, bits: int, block_b: int = 256) -> jnp.ndarray:
+    """(..., N) -> (..., N): fused per-row min-max quantization round trip
+    (what a ``bits``-bit receiver sees); leading dims flattened to rows."""
+    shape = z.shape
+    flat = z.reshape(-1, shape[-1])
+    out = quant_kernel.quantize_dequantize(flat, bits, block_b=block_b,
+                                           interpret=_interpret())
+    return out.reshape(shape)
 
 
 def distill_loss(logits: jnp.ndarray, teacher: jnp.ndarray) -> jnp.ndarray:

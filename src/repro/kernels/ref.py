@@ -20,6 +20,17 @@ def enhanced_era_fused(z_clients: jnp.ndarray, beta: float) -> jnp.ndarray:
     return enhanced_era(jnp.mean(z_clients.astype(jnp.float32), axis=0), beta)
 
 
+def quantize_dequantize(z: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-row min-max uniform quantization round trip over the last axis."""
+    levels = float(2 ** bits - 1)
+    z32 = z.astype(jnp.float32)
+    zmin = z32.min(axis=-1, keepdims=True)
+    zmax = z32.max(axis=-1, keepdims=True)
+    scale = jnp.maximum(zmax - zmin, 1e-9)
+    q = jnp.round((z32 - zmin) / scale * levels) / levels
+    return (q * scale + zmin).astype(z.dtype)
+
+
 def distill_loss(logits: jnp.ndarray, teacher: jnp.ndarray) -> jnp.ndarray:
     """Per-row soft-target CE: -sum_j t_j log_softmax(l)_j -> (B,)."""
     l32 = logits.astype(jnp.float32)

@@ -1,0 +1,313 @@
+"""Unit + property tests for the soft-label codec subsystem
+(`repro.compress`): simplex preservation, quantization-error
+monotonicity, cache-delta exactness, analytic payload hand-counts, and
+the CFD-refactor regression (Table-V bytes + aggregation output)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.compress import (
+    CODECS,
+    CacheDeltaCodec,
+    IdentityCodec,
+    QuantCodec,
+    TopKCodec,
+    get_codec,
+)
+from repro.core import comm
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+ALL_SPECS = ("identity", "quant8", "quant4", "quant1", "topk2", "topk4",
+             "cache_delta", "cache_delta+quant8", "cache_delta+quant4",
+             "cache_delta+topk4")
+
+
+def _probs(key, shape):
+    return jax.random.dirichlet(key, jnp.ones(shape[-1]), shape[:-1])
+
+
+def _ctx(key, m, n):
+    base = _probs(key, (m, n))
+    present = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.6, (m,))
+    return base, present
+
+
+# ---------------------------------------------------------------------------
+# Protocol invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ALL_SPECS)
+def test_roundtrip_equals_decode_of_encode(spec):
+    """The fused roundtrip (kernel path) must match decode(encode(z))."""
+    c = get_codec(spec)
+    z = _probs(KEY, (3, 17, 10))
+    base, present = _ctx(jax.random.fold_in(KEY, 2), 17, 10)
+    rt = c.roundtrip(z, base=base, present=present)
+    dd = c.decode(c.encode(z, base, present), base, present)
+    np.testing.assert_allclose(np.asarray(rt), np.asarray(dd),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS)
+def test_decoded_outputs_stay_on_simplex(spec):
+    c = get_codec(spec)
+    z = _probs(KEY, (4, 23, 6))
+    base, present = _ctx(jax.random.fold_in(KEY, 3), 23, 6)
+    out = np.asarray(c.roundtrip(z, base=base, present=present))
+    assert out.shape == z.shape
+    assert (out >= -1e-7).all(), spec
+    np.testing.assert_allclose(out.sum(-1), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS)
+def test_codecs_are_scan_safe_and_jittable(spec):
+    c = get_codec(spec)
+    assert c.scan_safe
+    z = _probs(KEY, (2, 9, 5))
+    base, present = _ctx(jax.random.fold_in(KEY, 4), 9, 5)
+    jitted = jax.jit(lambda z: c.roundtrip(z, base=base, present=present))
+    np.testing.assert_allclose(
+        np.asarray(jitted(z)),
+        np.asarray(c.roundtrip(z, base=base, present=present)),
+        rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 40), st.integers(2, 32), st.integers(0, 10_000))
+def test_quant_error_monotone_non_increasing_in_bits(rows, n_classes, seed):
+    """More bits never hurts — pointwise, because the min-max grids nest
+    (levels 1 | 15 | 255 all divide the next) and share endpoints."""
+    z = jnp.asarray(np.random.default_rng(seed).dirichlet(
+        np.ones(n_classes), rows), jnp.float32)
+    errs = [jnp.abs(z - ops.quantize_dequantize(z, bits))
+            for bits in (1, 4, 8)]
+    assert (errs[1] <= errs[0] + 1e-6).all()
+    assert (errs[2] <= errs[1] + 1e-6).all()
+
+
+def test_quant_kernel_matches_ref_oracle():
+    z = jax.random.normal(KEY, (37, 21))  # arbitrary reals, not just probs
+    for bits in (1, 2, 4, 8):
+        np.testing.assert_allclose(
+            np.asarray(ops.quantize_dequantize(z, bits)),
+            np.asarray(ref.quantize_dequantize(z, bits)),
+            rtol=1e-6, atol=1e-6)
+
+
+def test_quant1_collapses_to_row_extremes():
+    z = _probs(KEY, (5, 8))
+    out = np.asarray(ops.quantize_dequantize(z, 1))
+    zmin = np.asarray(z.min(-1, keepdims=True))
+    zmax = np.asarray(z.max(-1, keepdims=True))
+    assert np.all(np.isclose(out, zmin, atol=1e-6)
+                  | np.isclose(out, zmax, atol=1e-6))
+
+
+# ---------------------------------------------------------------------------
+# Cache-delta
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 30), st.integers(2, 16), st.integers(0, 10_000))
+def test_cache_delta_exact_when_prediction_equals_cache(m, n, seed):
+    """Zero residual survives any inner quantizer: min-max of an
+    all-zero row quantizes to exactly zero."""
+    rng = np.random.default_rng(seed)
+    base = jnp.asarray(rng.dirichlet(np.ones(n), m), jnp.float32)
+    z = jnp.broadcast_to(base, (3, m, n))
+    for spec in ("cache_delta", "cache_delta+quant8", "cache_delta+quant1"):
+        c = get_codec(spec)
+        out = c.roundtrip(z, base=base, present=jnp.ones(m, bool))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(z),
+                                   atol=1e-5, err_msg=spec)
+
+
+def test_cache_delta_uses_uniform_base_where_absent():
+    """Absent cache entries delta against the uniform prior — decoding
+    with identity inner is lossless either way."""
+    m, n = 11, 7
+    z = _probs(KEY, (2, m, n))
+    base = _probs(jax.random.fold_in(KEY, 5), (m, n))
+    c = get_codec("cache_delta")
+    for present in (jnp.zeros(m, bool), jnp.ones(m, bool)):
+        out = c.roundtrip(z, base=base, present=present)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(z), atol=1e-5)
+    # and with no cache context at all
+    np.testing.assert_allclose(np.asarray(c.roundtrip(z)), np.asarray(z),
+                               atol=1e-5)
+
+
+def test_cache_delta_residuals_smaller_than_raw_quant_error():
+    """The point of delta coding: near-cache predictions survive coarse
+    quantization far better than raw labels do."""
+    m, n = 64, 10
+    base = _probs(KEY, (m, n))
+    noise = 0.02 * jax.random.normal(jax.random.fold_in(KEY, 6), (m, n))
+    z = jnp.maximum(base + noise, 0.0)
+    z = z / z.sum(-1, keepdims=True)
+    present = jnp.ones(m, bool)
+    err_delta = jnp.abs(z - get_codec("cache_delta+quant4").roundtrip(
+        z, base=base, present=present)).mean()
+    err_raw = jnp.abs(z - get_codec("quant4").roundtrip(z)).mean()
+    assert float(err_delta) < float(err_raw)
+
+
+# ---------------------------------------------------------------------------
+# Analytic payload accounting
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 500), st.integers(2, 100))
+def test_payload_bytes_hand_counts(n, N):
+    assert IdentityCodec().payload_bytes(n, N) == n * N * 4.0
+    assert QuantCodec(8).payload_bytes(n, N) == n * N
+    assert QuantCodec(4).payload_bytes(n, N) == n * N * 0.5
+    assert QuantCodec(1).payload_bytes(n, N) == n * N / 8.0
+    # topk: k fp32 values + k indices per row
+    assert TopKCodec(2).payload_bytes(n, N) == n * 2 * (4.0 + 4.0)
+    assert TopKCodec(2, index_bytes=2.0).payload_bytes(n, N) == n * 2 * 6.0
+    # cache_delta: inner pays for N-1 classes (sum-zero drop)
+    assert get_codec("cache_delta+quant8").payload_bytes(n, N) == n * (N - 1)
+    assert CacheDeltaCodec().payload_bytes(n, N) == n * (N - 1) * 4.0
+
+
+def test_payload_bytes_small_case_exact():
+    """The hand-count from the docstring: 3 samples, 10 classes."""
+    assert IdentityCodec().payload_bytes(3, 10) == 120.0
+    assert QuantCodec(8).payload_bytes(3, 10) == 30.0
+    assert get_codec("cache_delta+quant8").payload_bytes(3, 10) == 27.0
+    assert TopKCodec(2).payload_bytes(3, 10) == 48.0
+
+
+def test_round_cost_uses_codec_payloads():
+    plain = comm.distillation_round_cost(
+        n_clients=10, n_selected=100, n_requested=40, n_classes=10)
+    coded = comm.distillation_round_cost(
+        n_clients=10, n_selected=100, n_requested=40, n_classes=10,
+        uplink_codec=get_codec("quant8"),
+        downlink_codec=get_codec("cache_delta+quant8"))
+    assert coded.uplink == plain.uplink / 4
+    # downlink payload shrinks; request-list bytes unchanged
+    req_list = 40 * 4.0 + 100 * 4.0
+    assert coded.downlink == pytest.approx(
+        10 * (get_codec("cache_delta+quant8").payload_bytes(40, 10) + req_list))
+    # identity codecs leave the legacy bits path untouched
+    ident = comm.distillation_round_cost(
+        n_clients=10, n_selected=100, n_requested=40, n_classes=10,
+        uplink_codec=get_codec("identity"),
+        downlink_codec=get_codec("identity"))
+    assert (ident.uplink, ident.downlink) == (plain.uplink, plain.downlink)
+
+
+def test_index_bytes_configurable():
+    assert comm.index_bytes_for(200) == 1.0
+    assert comm.index_bytes_for(1000) == 2.0
+    assert comm.index_bytes_for(65536) == 2.0
+    assert comm.index_bytes_for(100_000) == 4.0
+    wide = comm.distillation_round_cost(
+        n_clients=10, n_selected=100, n_requested=40, n_classes=10)
+    narrow = comm.distillation_round_cost(
+        n_clients=10, n_selected=100, n_requested=40, n_classes=10,
+        bytes_index=2.0)
+    assert wide.downlink - narrow.downlink == 10 * (40 + 100) * 2.0
+    assert wide.uplink == narrow.uplink
+
+
+# ---------------------------------------------------------------------------
+# Registry / spec parsing
+# ---------------------------------------------------------------------------
+
+def test_registry_and_spec_parsing():
+    assert set(CODECS) >= {"identity", "quant8", "quant4", "quant1",
+                           "topk", "cache_delta"}
+    assert get_codec(None).is_identity
+    assert get_codec("quant6").bits == 6
+    assert get_codec("topk4").k == 4
+    assert get_codec("topk").k == 2
+    c = get_codec("cache_delta+quant8")
+    assert c.name == "cache_delta+quant8" and c.inner.bits == 8
+    assert not c.inner.renormalize  # residual mode
+    inst = QuantCodec(3)
+    assert get_codec(inst) is inst
+    with pytest.raises(ValueError):
+        get_codec("nope")
+    with pytest.raises(ValueError):
+        get_codec("cache_delta+nope")
+
+
+def test_registry_is_the_extension_point():
+    """A codec registered in CODECS resolves by name through get_codec
+    (and hence through the FLConfig codec fields)."""
+    CODECS["_test_custom"] = lambda: QuantCodec(5)
+    try:
+        assert get_codec("_test_custom").bits == 5
+    finally:
+        del CODECS["_test_custom"]
+
+
+def test_index_bytes_threads_into_topk():
+    assert get_codec("topk2", index_bytes=2.0).payload_bytes(10, 8) \
+        == 10 * 2 * (4.0 + 2.0)
+    assert get_codec("cache_delta+topk2",
+                     index_bytes=2.0).inner.index_bytes == 2.0
+    # and from FLConfig through the engine constructor
+    from repro.fl import FederatedDistillation, FLConfig
+    from repro.fl.strategies import STRATEGIES
+
+    cfg = FLConfig(n_clients=4, n_classes=4, dim=8, rounds=2, local_steps=1,
+                   distill_steps=1, public_size=60, public_per_round=12,
+                   private_size=80, hidden=16, alpha=0.5,
+                   uplink_codec="topk2", index_bytes=2.0)
+    fd = FederatedDistillation(cfg, STRATEGIES["mean"]())
+    assert fd.codec_up.index_bytes == 2.0
+
+
+# ---------------------------------------------------------------------------
+# CFD refactor regression: the strategy now delegates to QuantCodec
+# ---------------------------------------------------------------------------
+
+def _legacy_cfd_transmit(z, b_up):
+    """The inline quantizer CFDStrategy shipped before the codec
+    subsystem existed — pinned verbatim as the regression oracle."""
+    levels = 2 ** b_up - 1
+    zmin = z.min(axis=-1, keepdims=True)
+    zmax = z.max(axis=-1, keepdims=True)
+    scale = jnp.maximum(zmax - zmin, 1e-9)
+    q = jnp.round((z - zmin) / scale * levels) / levels
+    deq = q * scale + zmin
+    return deq / jnp.maximum(deq.sum(-1, keepdims=True), 1e-9)
+
+
+@pytest.mark.parametrize("b_up", [1, 2, 8])
+def test_cfd_transmit_matches_legacy_inline_quantizer(b_up):
+    from repro.fl.strategies import STRATEGIES
+
+    s = STRATEGIES["cfd"](b_up=b_up)
+    z = _probs(KEY, (6, 40, 10))
+    got = s.transmit(z, None)
+    want = _legacy_cfd_transmit(z, b_up)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    # aggregation output (the value the server actually consumes)
+    np.testing.assert_allclose(np.asarray(s.aggregate(got, None, 1)[0]),
+                               np.asarray(jnp.mean(want, axis=0)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_cfd_table5_byte_values_pinned():
+    """Table V setting (K=100, |P^t|=1000, N=10, b_up=1): the refactor
+    must not move a single byte of the pinned analytic costs."""
+    c = comm.distillation_round_cost(
+        n_clients=100, n_selected=1000, n_requested=1000, n_classes=10,
+        uplink_bits=1.0)
+    assert c.uplink == 100 * 1000 * 10 * 1 / 8  # 125_000.0, byte-exact
+    assert c.downlink == 100 * (1000 * 10 * 4.0 + 1000 * 4.0 + 1000 * 4.0)

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import attn_kernel, distill_kernel, era_kernel, ops, ref
+from repro.kernels import attn_kernel, distill_kernel, era_kernel, ops, quant_kernel, ref
 
 KEY = jax.random.PRNGKey(42)
 
@@ -45,6 +45,30 @@ def test_era_kernel_matches_core_impl():
     a = np.asarray(core_era.enhanced_era(z, 2.0, impl="jnp"))
     b = np.asarray(core_era.enhanced_era(z, 2.0, impl="pallas"))
     np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Quantize-dequantize (soft-label codec round trip)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,N", [(8, 10), (100, 100), (257, 33), (5, 200)])
+@pytest.mark.parametrize("bits", [1, 4, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_kernel_sweep(B, N, bits, dtype):
+    z = _probs(KEY, (B, N)).astype(dtype)
+    out = quant_kernel.quantize_dequantize(z, bits, block_b=64)
+    exp = ref.quantize_dequantize(z, bits)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), rtol=tol, atol=tol)
+
+
+def test_quant_kernel_lane_padding_does_not_corrupt_minmax():
+    """N < 128 forces lane padding; the masked reduction must ignore the
+    pad (an unmasked min would see the zero pad and stretch the range)."""
+    z = 0.5 + 0.4 * _probs(KEY, (16, 7))  # all entries well above 0
+    out = np.asarray(quant_kernel.quantize_dequantize(z, 8))
+    assert out.min() >= float(z.min()) - 1e-5
 
 
 # ---------------------------------------------------------------------------

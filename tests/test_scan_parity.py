@@ -7,6 +7,8 @@ The ledger is integer-derived (sample counts, byte constants), so it
 must match to float exactness; eval metrics and cache values to
 allclose.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -93,6 +95,55 @@ def test_scanned_engine_matches_host_loop_with_catch_up():
     accounting against the host loop's per-package packaging."""
     sc = Scenario(participation=fixed_fraction(0.5), outages=(Outage(0, 2, 3),))
     _assert_parity(*_pair("scarlet", sc))
+
+
+# ---------------------------------------------------------------------------
+# Wire codecs: both engines must apply the identical encode->decode round
+# trip AND charge the identical analytic payload bytes
+# ---------------------------------------------------------------------------
+
+CODEC_SPECS = ("quant8", "quant4", "topk", "cache_delta", "cache_delta+quant8")
+
+
+@pytest.mark.parametrize("codec", CODEC_SPECS)
+def test_scanned_engine_matches_host_loop_with_codec(codec):
+    strat_kw = STRATEGY_KW["scarlet"]
+    cfg = dataclasses.replace(CFG, uplink_codec=codec)
+    host = FederatedDistillation(
+        cfg, STRATEGIES["scarlet"](**strat_kw), cache_duration=3,
+        scenario=PARTICIPATIONS["bernoulli"], rng_backend="jax")
+    scan = ScannedFederatedDistillation(
+        cfg, STRATEGIES["scarlet"](**strat_kw), cache_duration=3,
+        scenario=PARTICIPATIONS["bernoulli"])
+    _assert_parity(host, host.run(), scan, scan.run())
+
+
+def test_scanned_engine_matches_host_loop_with_downlink_codec():
+    """Lossy downlink feeds the decoded teacher into the global cache —
+    cache values must still agree bit-for-bit between the engines."""
+    cfg = dataclasses.replace(CFG, uplink_codec="cache_delta+quant8",
+                              downlink_codec="quant8")
+    host = FederatedDistillation(
+        cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=3,
+        rng_backend="jax")
+    scan = ScannedFederatedDistillation(
+        cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=3)
+    _assert_parity(host, host.run(), scan, scan.run())
+
+
+def test_codec_shrinks_ledger_by_analytic_ratio():
+    """Same run, quant8 uplink vs identity: every round's uplink is
+    exactly 4x smaller; downlink is untouched."""
+    base = FederatedDistillation(
+        CFG, STRATEGIES["scarlet"](beta=1.5), cache_duration=3,
+        rng_backend="jax")
+    h0 = base.run()
+    coded = FederatedDistillation(
+        dataclasses.replace(CFG, uplink_codec="quant8"),
+        STRATEGIES["scarlet"](beta=1.5), cache_duration=3, rng_backend="jax")
+    h1 = coded.run()
+    for r0, r1 in zip(h0.ledger.rounds, h1.ledger.rounds):
+        assert r1.uplink == pytest.approx(r0.uplink / 4)
 
 
 def test_scanned_engine_rejects_unsupported_modes():
