@@ -1,29 +1,47 @@
-"""Engine benchmark: scanned (lax.scan) vs host-loop rounds/sec.
+"""Engine benchmark: host loop vs scanned (lax.scan) vs client-sharded.
 
-The host loop dispatches dozens of small device programs per round and
-syncs the host every round (participation counts, miss counts, subset
-sampling); the scanned engine compiles the whole run into one XLA
-program.  The gap is therefore dispatch/sync-bound: this benchmark uses
-a deliberately small per-round compute load (1 local step, tiny MLP) so
-the per-round overhead — the thing the scanned engine removes — is what
-gets measured.  Both engines draw from the identical jax key stream
-(``rng_backend="jax"``), so they run the same rounds.
+Two sweeps:
 
-Scenario sweeps and multi-seed runs inherit the scanned numbers: a
-sweep is N independent ``run()`` calls, each one program launch.
+- **scan vs host** (small K): the host loop dispatches dozens of small
+  device programs per round and syncs the host every round; the scanned
+  engine compiles the whole run into one XLA program.  The gap is
+  dispatch/sync-bound, so the per-round compute load is deliberately
+  tiny (1 local step, tiny MLP).
+- **shard vs scan** (large K — 200/1000/4000 clients, the cohort sizes
+  compressed-distillation papers sweep): the scanned engine keeps the
+  whole client axis on one device; the sharded engine partitions it
+  over the mesh "data" axis (``shard_map``), trading psum latency for
+  per-device client load.  On a multi-chip platform this is the only
+  way past single-device memory; on CPU it also exercises the exact
+  production code path (the mesh uses every local device via
+  ``best_data_axis``).
+
+Both device engines draw from the identical jax key stream, so all
+engines run the same rounds.  ``--quick`` shrinks rounds/cohorts to CI
+smoke sizes (and adapts the mesh to however many devices the runner
+exposes, so it works at 1 device too).
 """
 from __future__ import annotations
 
 import time
 
 from benchmarks._common import emit
-from repro.fl import FederatedDistillation, FLConfig, ScannedFederatedDistillation
+from repro.fl import (
+    FederatedDistillation,
+    FLConfig,
+    ScannedFederatedDistillation,
+    ShardedFederatedDistillation,
+)
+from repro.fl.shard_engine import best_data_axis
 from repro.fl.strategies import STRATEGIES
 
 ROUNDS = 30
 CLIENT_COUNTS = (10, 50, 200)
+SHARD_ROUNDS = 10
+SHARD_CLIENT_COUNTS = (200, 1000, 4000)
 QUICK_ROUNDS = 8
 QUICK_CLIENT_COUNTS = (10,)
+QUICK_SHARD_CLIENT_COUNTS = (16,)
 
 
 def _cfg(n_clients: int, rounds: int) -> FLConfig:
@@ -40,9 +58,7 @@ def _time_run(engine, rounds: int) -> float:
     return time.perf_counter() - t0
 
 
-def run(quick: bool = False):
-    rounds = QUICK_ROUNDS if quick else ROUNDS
-    counts = QUICK_CLIENT_COUNTS if quick else CLIENT_COUNTS
+def _scan_vs_host(counts, rounds) -> list:
     rows = []
     for K in counts:
         cfg = _cfg(K, rounds)
@@ -64,6 +80,46 @@ def run(quick: bool = False):
             "derived": (f"{rounds / t_scan:.1f} rounds/s, "
                         f"{t_host / t_scan:.1f}x vs host loop"),
         })
+    return rows
+
+
+def _shard_vs_scan(counts, rounds) -> list:
+    rows = []
+    for K in counts:
+        cfg = _cfg(K, rounds)
+        scan = ScannedFederatedDistillation(
+            cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=4)
+        t_scan = _time_run(scan, rounds)
+        data = best_data_axis(K)
+        shard = ShardedFederatedDistillation(
+            cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=4,
+            mesh=f"{data}")
+        t_shard = _time_run(shard, rounds)
+        rows.append({
+            # "base" suffix: the scan baseline of the *sharded* sweep —
+            # K=200 also appears in the host-vs-scan sweep at a
+            # different round budget, so names must stay unique
+            "name": f"engine_scan_base_K{K}",
+            "us_per_call": t_scan / rounds * 1e6,
+            "derived": f"{rounds / t_scan:.1f} rounds/s",
+        })
+        rows.append({
+            "name": f"engine_shard_K{K}_d{data}",
+            "us_per_call": t_shard / rounds * 1e6,
+            "derived": (f"{rounds / t_shard:.1f} rounds/s, "
+                        f"{t_scan / t_shard:.1f}x vs scan, "
+                        f"{data} shards"),
+        })
+    return rows
+
+
+def run(quick: bool = False):
+    if quick:
+        rows = _scan_vs_host(QUICK_CLIENT_COUNTS, QUICK_ROUNDS)
+        rows += _shard_vs_scan(QUICK_SHARD_CLIENT_COUNTS, QUICK_ROUNDS)
+        return rows
+    rows = _scan_vs_host(CLIENT_COUNTS, ROUNDS)
+    rows += _shard_vs_scan(SHARD_CLIENT_COUNTS, SHARD_ROUNDS)
     return rows
 
 

@@ -246,6 +246,8 @@ def catch_up_bytes_device(
     part: jnp.ndarray,
     t,
     bytes_per_value: float = 4.0,
+    *,
+    axis_name: str | None = None,
 ) -> jnp.ndarray:
     """Total catch-up downlink bytes for this round, computed densely.
 
@@ -254,6 +256,11 @@ def catch_up_bytes_device(
     whose ``last_sync`` predates round ``t - 1``, count the global-cache
     entries newer than its sync point and charge values + index + ts per
     entry.  ``last_sync``/``part`` are ``(K,)``; ``t`` may be traced.
+
+    Under a client-sharded (``shard_map``) engine, ``last_sync``/``part``
+    are the shard-local ``(K_loc,)`` slices; pass ``axis_name`` to
+    psum the per-shard total into the replicated global value (the cache
+    itself is replicated, so per-client terms need no communication).
     """
     n_classes = cache_g.num_classes
     returning = jnp.logical_and(part, last_sync < t - 1)              # (K,)
@@ -261,4 +268,7 @@ def catch_up_bytes_device(
                             cache_g.ts[None, :] > last_sync[:, None])  # (K, |P|)
     counts = jnp.sum(newer, axis=1).astype(jnp.float32)
     per_client = counts * (n_classes * bytes_per_value + 8.0)
-    return jnp.sum(jnp.where(returning, per_client, 0.0))
+    total = jnp.sum(jnp.where(returning, per_client, 0.0))
+    if axis_name is not None:
+        total = jax.lax.psum(total, axis_name)
+    return total

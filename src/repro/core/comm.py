@@ -16,6 +16,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+import jax
 import numpy as np
 
 BYTES_F32 = 4.0
@@ -106,6 +107,7 @@ def distillation_round_cost_device(
     bytes_index: float = BYTES_INDEX,
     uplink_codec=None,
     downlink_codec=None,
+    axis_name: Optional[str] = None,
 ) -> Tuple[float, float]:
     """Pure-arithmetic ``(uplink, downlink)`` bytes for one round.
 
@@ -113,6 +115,14 @@ def distillation_round_cost_device(
     scalar — this is the cost function the scanned (``lax.scan``) engine
     evaluates on-device each round; ``distillation_round_cost`` wraps it
     for the host loop.
+
+    ``axis_name`` makes the cost shard-aware for client-sharded
+    (``shard_map``) engines: ``n_clients`` is then the *per-shard*
+    participant count and is psum-reduced over that mesh axis before the
+    (replicated) arithmetic.  Every other count — including
+    ``catch_up_down`` — must already be a replicated global value (the
+    shard engine reduces catch-up via
+    ``cache.catch_up_bytes_device(..., axis_name=...)``).
 
     The uplink and downlink *sample counts are split*: confidence-gated
     methods (Selective-FD) upload fewer samples per client
@@ -127,6 +137,8 @@ def distillation_round_cost_device(
     CFD's Table-V byte values are untouched.  Request-list and cache
     signal bytes are codec-independent (``bytes_index`` per index entry).
     """
+    if axis_name is not None:
+        n_clients = jax.lax.psum(n_clients, axis_name)
     if uplink_codec is not None and not uplink_codec.is_identity:
         up_per_client = uplink_codec.payload_bytes(n_up_samples, n_classes)
     else:

@@ -5,6 +5,7 @@ from repro.fl.baselines import FedAvg, Individual  # noqa: F401
 from repro.fl.config import FLConfig  # noqa: F401
 from repro.fl.rounds import FederatedDistillation, History  # noqa: F401
 from repro.fl.scan_engine import ScannedFederatedDistillation  # noqa: F401
+from repro.fl.shard_engine import ShardedFederatedDistillation  # noqa: F401
 from repro.fl.scenarios import (  # noqa: F401
     Heterogeneity,
     Outage,

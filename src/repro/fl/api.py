@@ -9,7 +9,14 @@ from repro.fl.config import FLConfig
 from repro.fl.rounds import FederatedDistillation, History
 from repro.fl.scan_engine import ScannedFederatedDistillation
 from repro.fl.scenarios import Scenario
+from repro.fl.shard_engine import ShardedFederatedDistillation
 from repro.fl.strategies import STRATEGIES
+
+_ENGINES = {
+    "host": FederatedDistillation,
+    "scan": ScannedFederatedDistillation,
+    "shard": ShardedFederatedDistillation,
+}
 
 __all__ = ["run_method"]
 
@@ -41,10 +48,13 @@ def run_method(
 
     ``engine="scan"`` runs the device-resident fused multi-round engine
     (one ``lax.scan`` program, zero per-round host round-trips; see
-    :mod:`repro.fl.scan_engine`); ``engine="host"`` is the reference
-    Python round loop.  ``rng_backend="jax"`` makes the host loop draw
-    subsets/participation from the scanned engine's key stream so the
-    two are directly comparable.
+    :mod:`repro.fl.scan_engine`); ``engine="shard"`` additionally
+    partitions the client axis over the ``cfg.mesh_spec`` device mesh
+    (:mod:`repro.fl.shard_engine` — client counts beyond one chip's
+    memory); ``engine="host"`` is the reference Python round loop.
+    ``rng_backend="jax"`` makes the host loop draw
+    subsets/participation from the scanned engines' key stream so all
+    engines are directly comparable.
 
     ``codec`` (uplink) / ``downlink_codec`` select soft-label wire
     codecs (:mod:`repro.compress` specs, e.g. ``"quant8"``,
@@ -52,16 +62,17 @@ def run_method(
     ``FLConfig`` fields; the ledger switches to the codec's analytic
     payload accounting on that direction.
     """
-    if engine not in ("host", "scan"):
-        raise ValueError(f"unknown engine: {engine!r}")
+    if engine not in _ENGINES:
+        raise ValueError(f"unknown engine: {engine!r} "
+                         f"(want one of {sorted(_ENGINES)})")
     if codec is not None:
         cfg = dataclasses.replace(cfg, uplink_codec=codec)
     if downlink_codec is not None:
         cfg = dataclasses.replace(cfg, downlink_codec=downlink_codec)
     if method in ("fedavg", "individual"):
-        if engine == "scan":
-            raise ValueError(f"{method} is a baseline with no scanned path; "
-                             "use engine='host'")
+        if engine != "host":
+            raise ValueError(f"{method} is a baseline with no scanned/sharded "
+                             "path; use engine='host'")
         if rng_backend is not None:
             raise ValueError(f"{method} has no rng_backend knob (baselines "
                              "draw nothing from the round key stream)")
@@ -71,7 +82,7 @@ def run_method(
         cls = FedAvg if method == "fedavg" else Individual
         return cls(cfg).run(rounds)
     strat = STRATEGIES[method](**strategy_kw)
-    cls = ScannedFederatedDistillation if engine == "scan" else FederatedDistillation
+    cls = _ENGINES[engine]
     kw = dict(cache_duration=cache_duration,
               use_cache=use_cache,
               probabilistic_expiry=probabilistic_expiry,

@@ -33,3 +33,9 @@ class FLConfig:
     # 2 for public datasets <= 65k samples; 4 is the legacy conservative
     # default that all pinned ledger values assume)
     index_bytes: float = 4.0
+    # client-sharded engine (engine="shard"): mesh to partition the
+    # client axis over — "auto" (the widest local device count that
+    # divides n_clients), "DATA"/"DATAxMODEL" (e.g. "8", "2x4"), or
+    # "production[_multipod]"; see repro.fl.shard_engine.resolve_mesh.
+    # Explicit specs require n_clients divisible by the data-axis size.
+    mesh_spec: str = "auto"

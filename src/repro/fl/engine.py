@@ -39,6 +39,7 @@ from repro.fl.rounds import (
     val_loss_soft,
 )
 from repro.fl.scan_engine import ScannedFederatedDistillation
+from repro.fl.shard_engine import ShardedFederatedDistillation
 from repro.fl.scenarios import (
     Heterogeneity,
     Outage,
@@ -64,6 +65,7 @@ __all__ = [
     "History",
     "FederatedDistillation",
     "ScannedFederatedDistillation",
+    "ShardedFederatedDistillation",
     "FedAvg",
     "Individual",
     "run_method",

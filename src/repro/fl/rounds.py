@@ -284,6 +284,7 @@ class FederatedDistillation:
         ] if self.track_local_caches else []
         self.prev_teacher: Optional[Tuple[np.ndarray, jnp.ndarray]] = None  # (idx, z)
         self.last_sync = np.full(c.n_clients, 0, np.int64)  # last participated round
+        self.t_done = 0  # rounds completed so far (run() continues from here)
         self.n_params = sum(x.size for x in jax.tree_util.tree_leaves(self.server_params))
         # per-round key stream shared with the scanned engine (jax mode)
         self._key_rounds = jax.random.fold_in(jax.random.PRNGKey(c.seed), 43)
@@ -298,16 +299,116 @@ class FederatedDistillation:
 
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None) -> History:
+        """Run ``rounds`` more rounds (default: the configured count).
+
+        Rounds are numbered absolutely: a second ``run()`` — or a run on
+        an engine restored via :meth:`load_state_dict` — continues at
+        ``t_done + 1`` with the *same* per-round key stream a single
+        uninterrupted run would have used, so split runs are bit-
+        identical to unsplit ones per round (``tests/test_checkpoint.py``).
+        Each ``run()`` returns a *fresh* :class:`History`, so cumulative
+        quantities (``ledger`` totals, ``cumulative_mb``) cover only that
+        leg — stitch legs by concatenating their ledgers, as the
+        checkpoint tests do; the ledger is not part of ``state_dict``.
+        """
         c = self.cfg
         hist = History()
         T = rounds or c.rounds
-        for t in range(1, T + 1):
+        t_end = self.t_done + T
+        for t in range(self.t_done + 1, t_end + 1):
             self._round(t, hist)
-            if t % c.eval_every == 0 or t == T:
+            if t % c.eval_every == 0 or t == t_end:
                 self._eval(t, hist)
+        self.t_done = t_end
         hist.final_server_acc = hist.server_acc[-1] if hist.server_acc else 0.0
         hist.final_client_acc = hist.client_acc[-1] if hist.client_acc else 0.0
         return hist
+
+    # ------------------------------------------------------------------
+    # Checkpointing: the engine state that evolves across rounds, as one
+    # fixed-structure pytree (repro.checkpoint.save_pytree-compatible).
+    # ------------------------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """Snapshot of all cross-round simulation state.
+
+        Covers params, cache, sync bookkeeping, the previous-round
+        teacher, and the round counter — everything ``run()`` reads that
+        a fresh engine would not reconstruct from the config.  The
+        structure is fixed (absent optionals become zero placeholders +
+        ``have_*`` flags) so ``checkpoint.load_pytree`` can use a fresh
+        engine's ``state_dict()`` as the ``like`` tree.  Mirrored local
+        caches (``track_local_caches``, a host-only verification mode)
+        are not included, and neither are the legacy stateful numpy
+        Generators — bit-identical continuation therefore requires the
+        stateless ``rng_backend="jax"`` key stream (any engine).
+        """
+        c = self.cfg
+        m = c.public_per_round
+        if self.prev_teacher is not None:
+            pidx, pteach = self.prev_teacher
+            if jnp.ndim(pteach) == 3:
+                # per-client (K, m, N) teachers (COMET) don't fit the
+                # fixed (m, N) slot a fresh engine's like-tree declares,
+                # so the npz round trip would fail on restore — reject
+                # at save time with a diagnosable error instead
+                raise ValueError(
+                    "per-client prev_teacher stacks (COMET) are not "
+                    "checkpointable; state_dict supports shared-teacher "
+                    "strategies only")
+            prev_idx = jnp.asarray(pidx, jnp.int32)
+            prev_teacher = jnp.asarray(pteach, jnp.float32)
+            have_prev = jnp.asarray(True)
+        else:
+            prev_idx = jnp.zeros((m,), jnp.int32)
+            prev_teacher = jnp.zeros((m, c.n_classes), jnp.float32)
+            have_prev = jnp.asarray(False)
+        if self.last_teacher_val is not None:
+            teacher_val = jnp.asarray(self.last_teacher_val, jnp.float32)
+            have_tv = jnp.asarray(True)
+        else:
+            teacher_val = jnp.zeros((len(self.pub_val_idx), c.n_classes),
+                                    jnp.float32)
+            have_tv = jnp.asarray(False)
+        return dict(
+            t_done=jnp.asarray(self.t_done, jnp.int32),
+            client_params=self.client_params,
+            server_params=self.server_params,
+            cache=self.cache_g,
+            prev_idx=prev_idx,
+            prev_teacher=prev_teacher,
+            have_prev=have_prev,
+            teacher_val=teacher_val,
+            have_tv=have_tv,
+            last_sync=jnp.asarray(self.last_sync, jnp.int32),
+        )
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        """Restore a :meth:`state_dict` snapshot; the next ``run()``
+        continues bit-identically to an uninterrupted run."""
+        if self.rng_backend != "jax":
+            # the numpy Generators are stateful and not captured by
+            # state_dict — a restored numpy-backend run would silently
+            # replay virgin streams and diverge from the original
+            raise ValueError(
+                "restoring requires the stateless rng_backend='jax' key "
+                "stream (construct the engine with rng_backend='jax')")
+        if self.track_local_caches:
+            # mirrored per-client caches are not captured either: a
+            # restored engine would verify cold mirrors against a warm
+            # global cache and report false divergence
+            raise ValueError(
+                "track_local_caches state is not checkpointed; restore "
+                "into an engine with track_local_caches=False")
+        self.t_done = int(state["t_done"])
+        self.client_params = state["client_params"]
+        self.server_params = state["server_params"]
+        self.cache_g = cache_lib.CacheState(*state["cache"])
+        self.prev_teacher = ((np.asarray(state["prev_idx"]),
+                              jnp.asarray(state["prev_teacher"]))
+                             if bool(state["have_prev"]) else None)
+        self.last_teacher_val = (jnp.asarray(state["teacher_val"])
+                                 if bool(state["have_tv"]) else None)
+        self.last_sync = np.asarray(state["last_sync"]).astype(np.int64)
 
     # ------------------------------------------------------------------
     def _local_train_all(self, params, t):

@@ -224,54 +224,40 @@ class ScannedFederatedDistillation(FederatedDistillation):
 
     # ------------------------------------------------------------------
     def _initial_carry(self):
-        c = self.cfg
-        m = c.public_per_round
-        if self.prev_teacher is not None:
-            pidx, pteach = self.prev_teacher
-            prev_idx = jnp.asarray(pidx, jnp.int32)
-            prev_teacher = jnp.asarray(pteach, jnp.float32)
-            have_prev = jnp.asarray(True)
-        else:
-            prev_idx = jnp.zeros((m,), jnp.int32)
-            prev_teacher = jnp.zeros((m, c.n_classes), jnp.float32)
-            have_prev = jnp.asarray(False)
-        if self.last_teacher_val is not None:
-            teacher_val = jnp.asarray(self.last_teacher_val, jnp.float32)
-            have_tv = jnp.asarray(True)
-        else:
-            teacher_val = jnp.zeros((len(self.pub_val_idx), c.n_classes),
-                                    jnp.float32)
-            have_tv = jnp.asarray(False)
-        return dict(
-            client_params=self.client_params,
-            server_params=self.server_params,
-            cache=self.cache_g,
-            prev_teacher=prev_teacher,
-            prev_idx=prev_idx,
-            have_prev=have_prev,
-            teacher_val=teacher_val,
-            have_tv=have_tv,
-            last_sync=jnp.asarray(self.last_sync, jnp.int32),
-        )
+        """The scan carry is exactly the checkpointable engine state
+        (same placeholders, same ``have_*`` flags) minus the host-side
+        round counter — one source of truth for both."""
+        carry = self.state_dict()
+        del carry["t_done"]
+        return carry
 
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None) -> History:
         c = self.cfg
         T = rounds or c.rounds
-        ts = jnp.arange(1, T + 1, dtype=jnp.int32)
-        offline = jnp.asarray(self.scenario.offline_masks(T, c.n_clients))
-        eval_np = np.array([(t % c.eval_every == 0) or (t == T)
-                            for t in range(1, T + 1)])
+        t0 = self.t_done  # absolute round numbering (chained/restored runs)
+        ts = jnp.arange(t0 + 1, t0 + T + 1, dtype=jnp.int32)
+        offline = jnp.asarray(
+            self.scenario.offline_masks(T, c.n_clients, start=t0 + 1))
+        eval_np = np.array([(t % c.eval_every == 0) or (t == t0 + T)
+                            for t in range(t0 + 1, t0 + T + 1)])
+        carry, ys = self._run_rounds(ts, offline, jnp.asarray(eval_np))
+        self.t_done = t0 + T
+        return self._finish_run(carry, ys, eval_np, t0)
+
+    def _run_rounds(self, ts, offline, do_eval):
+        """Launch the device program for the given round batch; the
+        client-sharded engine overrides this with its shard_map twin."""
         if self._scan_fn is None:
             self._scan_fn = jax.jit(
                 lambda carry, xs: jax.lax.scan(self._round_device, carry, xs))
-        carry, ys = self._scan_fn(self._initial_carry(),
-                                  (ts, offline, jnp.asarray(eval_np)))
+        return self._scan_fn(self._initial_carry(), (ts, offline, do_eval))
 
+    def _finish_run(self, carry, ys, eval_np, t0) -> History:
         # persist final device state (parity checks, chained run() calls)
         self.client_params = carry["client_params"]
         self.server_params = carry["server_params"]
-        self.cache_g = carry["cache"]
+        self.cache_g = cache_lib.CacheState(*carry["cache"])
         self.last_sync = np.asarray(carry["last_sync"]).astype(np.int64)
         if bool(carry["have_prev"]):
             self.prev_teacher = (np.asarray(carry["prev_idx"]),
@@ -293,7 +279,7 @@ class ScannedFederatedDistillation(FederatedDistillation):
         for u, d in zip(up, down):
             hist.ledger.record(comm_lib.RoundCost(float(u), float(d)))
         for i in np.nonzero(eval_np)[0]:
-            hist.rounds.append(int(i) + 1)
+            hist.rounds.append(t0 + int(i) + 1)
             hist.server_acc.append(float(sa[i]))
             hist.client_acc.append(float(ca[i]))
             hist.cumulative_mb.append(float(cum[i]) / 1e6)

@@ -182,12 +182,14 @@ class Scenario:
                 off[o.client] = True
         return off
 
-    def offline_masks(self, n_rounds: int, n_clients: int) -> np.ndarray:
-        """``(T, K)`` stacked offline masks for rounds ``1..n_rounds`` —
-        outage windows are static config, so the scanned engine
-        precomputes them once and feeds them as scan inputs."""
+    def offline_masks(self, n_rounds: int, n_clients: int,
+                      start: int = 1) -> np.ndarray:
+        """``(T, K)`` stacked offline masks for rounds
+        ``start..start+n_rounds-1`` — outage windows are static config,
+        so the scanned engines precompute them once and feed them as
+        scan inputs (``start > 1`` for checkpoint-resumed runs)."""
         return np.stack([self.offline_mask(t, n_clients)
-                         for t in range(1, n_rounds + 1)])
+                         for t in range(start, start + n_rounds)])
 
     def participation_mask_device(self, key: jnp.ndarray,
                                   offline: jnp.ndarray) -> jnp.ndarray:

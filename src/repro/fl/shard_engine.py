@@ -1,0 +1,378 @@
+"""Client-sharded scanned engine: ``shard_map`` over the mesh "data" axis.
+
+The scanned engine (:mod:`repro.fl.scan_engine`) made a full FL run one
+XLA program, but the whole client axis lives on one chip — client count
+K is capped by a single device's memory.  This engine partitions the
+client axis across the mesh defined in :mod:`repro.launch.mesh`: the
+scan body runs under ``shard_map`` with every per-client tensor (stacked
+params, private shards, eval shards, ``last_sync``) split over the
+"data" axis, so each shard trains and predicts only its ``K / n_shards``
+clients.
+
+What crosses shards is exactly the strategy's *linear* aggregation
+moments plus a handful of scalar reductions:
+
+- aggregation uses the two-phase ``Strategy.partial_aggregate`` /
+  ``finalize_aggregate`` contract — per-shard weighted sums, one
+  ``psum``, then the nonlinearity (Enhanced-ERA sharpening, DS-FL
+  temperature softmax, Selective-FD gating ratio) applied once on the
+  replicated reduction;
+- byte accounting threads shard-local counts through the shard-aware
+  cost functions (``comm.distillation_round_cost_device(axis_name=...)``
+  psums the per-shard participant count,
+  ``cache.catch_up_bytes_device(axis_name=...)`` the per-shard catch-up
+  bytes);
+- eval metrics psum per-shard partial sums.
+
+Everything server-side (cache state, teacher assembly, server
+distillation, the public dataset) is replicated — redundantly computed
+by every shard, which keeps it bit-identical across shards without
+communication.
+
+Parity contract: participation and subset sampling fold the *same* key
+stream as the scanned engine, with the participation mask drawn over
+the full client axis on every shard (replicated — conscription ranks
+couple clients across shards) and then sliced locally.  All ledger
+inputs are therefore exact small-integer sums, so a sharded run's
+per-round comm ledger is byte-identical to ``engine="scan"`` and eval
+metrics are allclose (float reduction order differs) — asserted for the
+whole strategy x participation x codec matrix by
+``tests/test_engine_conformance.py``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:  # jax >= 0.6 re-exports it at the top level
+    from jax import shard_map as _shard_map_fn
+except ImportError:  # pragma: no cover - version-dependent import path
+    from jax.experimental.shard_map import shard_map as _shard_map_fn
+
+from repro.core import cache as cache_lib
+from repro.core import comm as comm_lib
+from repro.fl.rounds import (
+    _select,
+    accuracy,
+    accuracy_v,
+    distill,
+    distill_v,
+    local_train_masked_v,
+    local_train_v,
+    predict_v,
+    val_loss_hard_v,
+    val_loss_soft,
+)
+from repro.fl.scan_engine import ScannedFederatedDistillation
+from repro.launch.mesh import (
+    make_production_mesh,
+    make_test_mesh,
+    mesh_axis_sizes,
+)
+
+__all__ = ["ShardedFederatedDistillation", "resolve_mesh", "best_data_axis"]
+
+# The mesh axis carrying the client partition — the same "data" axis the
+# launch-layer sharding rules use for data parallelism / FSDP.
+CLIENT_AXIS = "data"
+
+_SPEC_RE = re.compile(r"^(\d+)(?:x(\d+))?$")
+
+
+def resolve_mesh(spec: Union[str, Mesh]) -> Mesh:
+    """Mesh from a *concrete* ``FLConfig.mesh_spec`` (or a Mesh, as-is).
+
+    ``"DATA"`` or ``"DATAxMODEL"`` (e.g. ``"8"``, ``"2x4"``): a
+    :func:`repro.launch.mesh.make_test_mesh` of that shape.
+    ``"production"`` / ``"production_multipod"``: the 16x16 (2x16x16)
+    pod meshes.
+
+    ``"auto"`` is resolved *before* this function by the engine
+    constructor (via :func:`best_data_axis`, which needs the client
+    count) and is rejected here so the spelling has exactly one meaning.
+    """
+    if isinstance(spec, Mesh):
+        return spec
+    if spec == "production":
+        return make_production_mesh()
+    if spec == "production_multipod":
+        return make_production_mesh(multi_pod=True)
+    m = _SPEC_RE.match(spec) if isinstance(spec, str) else None
+    if m is None:
+        raise ValueError(
+            f"unknown mesh_spec {spec!r} (want 'DATA', 'DATAxMODEL', "
+            "'production', or 'production_multipod'; 'auto' is only valid "
+            "through the engine constructor / FLConfig.mesh_spec)")
+    return make_test_mesh(int(m.group(1)), int(m.group(2) or 1))
+
+
+def best_data_axis(n_clients: int, n_devices: Optional[int] = None) -> int:
+    """Largest device count <= ``n_devices`` that divides ``n_clients``
+    evenly — the widest legal client partition for a run (benchmarks use
+    it to build meshes portable across device counts)."""
+    d = min(n_clients, n_devices if n_devices is not None else jax.device_count())
+    while n_clients % d:
+        d -= 1
+    return d
+
+
+class ShardedFederatedDistillation(ScannedFederatedDistillation):
+    """Client-sharded twin of :class:`ScannedFederatedDistillation`.
+
+    Same constructor plus ``mesh``: a concrete :class:`Mesh`, a spec
+    string (see :func:`resolve_mesh`), or ``None`` to use
+    ``cfg.mesh_spec``.  ``cfg.n_clients`` must divide evenly by the
+    mesh's "data"-axis size.  Every mode restriction of the scanned
+    engine applies unchanged (jax RNG, scan-safe strategy/codecs, no
+    ``track_local_caches``).
+    """
+
+    def __init__(self, *args, mesh: Union[str, Mesh, None] = None, **kwargs):
+        super().__init__(*args, **kwargs)
+        spec = mesh if mesh is not None else self.cfg.mesh_spec
+        if spec is None or spec in ("", "auto"):
+            # widest divisible client partition over the local devices —
+            # "auto" must never reject a client count
+            spec = f"{best_data_axis(self.cfg.n_clients)}"
+        self.mesh = resolve_mesh(spec)
+        if CLIENT_AXIS not in self.mesh.axis_names:
+            raise ValueError(
+                f"mesh {self.mesh.axis_names} has no {CLIENT_AXIS!r} axis "
+                "to partition clients over")
+        self.n_shards = mesh_axis_sizes(self.mesh)[CLIENT_AXIS]
+        if self.cfg.n_clients % self.n_shards:
+            raise ValueError(
+                f"n_clients={self.cfg.n_clients} does not divide evenly over "
+                f"the {self.n_shards}-way {CLIENT_AXIS!r} axis "
+                "(pick a divisible client count or a narrower mesh)")
+        self._shard_fn = None
+
+    # ------------------------------------------------------------------
+    def _consts(self) -> dict:
+        """Arrays the round body reads besides the carry: client-sharded
+        private/eval shards and replicated public/test data."""
+        consts = dict(
+            xs=self.xs, ys=self.ys, train_mask=self.train_mask,
+            xts=self.xts, yts=self.yts, tmask=self.tmask,
+            val_mask=self.val_mask,
+            x_pub=self.x_pub, x_test=self.x_test, y_test=self.y_test,
+            x_pub_val=self.x_pub[self.pub_val_idx],
+        )
+        if self.scenario.heterogeneity is not None:
+            consts.update(lr_k=self._lr_k, steps_k=self._steps_k)
+        return consts
+
+    def _specs(self):
+        """(carry, xs, consts) PartitionSpec pytrees (prefix form)."""
+        cax, rep = P(CLIENT_AXIS), P()
+        carry = dict(
+            client_params=cax, server_params=rep, cache=rep,
+            prev_teacher=rep, prev_idx=rep, have_prev=rep,
+            teacher_val=rep, have_tv=rep, last_sync=cax)
+        consts = dict(
+            xs=cax, ys=cax, train_mask=cax, xts=cax, yts=cax, tmask=cax,
+            val_mask=cax, x_pub=rep, x_test=rep, y_test=rep, x_pub_val=rep)
+        if self.scenario.heterogeneity is not None:
+            consts.update(lr_k=cax, steps_k=cax)
+        # xs = (ts, offline, do_eval): offline stays full-width (T, K) on
+        # every shard — the participation draw is global (see body)
+        return carry, (rep, rep, rep), consts
+
+    # ------------------------------------------------------------------
+    def _local_train_shard(self, params, t, consts):
+        c = self.cfg
+        tm = consts["train_mask"].astype(jnp.float32)
+        if self.scenario.heterogeneity is None:
+            return local_train_v(params, consts["xs"], consts["ys"], tm,
+                                 c.lr, c.local_steps)
+        decay = jnp.asarray(self._lr_decay, jnp.float32) ** (
+            jnp.asarray(t, jnp.float32) - 1.0)
+        return local_train_masked_v(params, consts["xs"], consts["ys"], tm,
+                                    consts["lr_k"] * decay, consts["steps_k"],
+                                    self._max_steps)
+
+    # ------------------------------------------------------------------
+    def _round_device_sharded(self, carry, xs, consts):
+        """One round on one shard: mirrors ``_round_device`` with the
+        client axis shard-local and all cross-client couplings reduced
+        via ``psum`` over the client mesh axis."""
+        c, s = self.cfg, self.strategy
+        K = c.n_clients
+        kloc = K // self.n_shards
+        t, offline_t, do_eval = xs
+
+        kt = jax.random.fold_in(self._key_rounds, t)
+        k_idx, k_part = jax.random.split(kt)
+        idx = jnp.sort(jax.random.choice(
+            k_idx, c.public_size, (c.public_per_round,), replace=False))
+        # Participation is drawn over the FULL client axis on every shard
+        # (replicated: same key -> same draw) — conscription ranks couple
+        # clients across shards and key-stream parity with engine="scan"
+        # requires the identical global sample — then sliced locally.
+        part_full = self.scenario.participation_mask_device(k_part, offline_t)
+        lo = jax.lax.axis_index(CLIENT_AXIS) * kloc
+        part = jax.lax.dynamic_slice_in_dim(part_full, lo, kloc)
+        part_f = part.astype(jnp.float32)
+        n_part = jnp.sum(part_full.astype(jnp.float32))  # global, replicated
+        any_p = n_part > 0
+
+        def gate(new, old):
+            """Keep ``old`` wholesale on total-outage rounds."""
+            return jax.tree_util.tree_map(
+                lambda a, b: jnp.where(any_p, a, b), new, old)
+
+        # --- clients (shard-local): distill on prev teacher, train -------
+        cp = carry["client_params"]
+        x_prev = consts["x_pub"][carry["prev_idx"]]
+        pteach = jnp.broadcast_to(carry["prev_teacher"],
+                                  (kloc,) + carry["prev_teacher"].shape)
+        upd = distill_v(cp, x_prev, pteach, c.lr_dist, c.distill_steps)
+        cp = _select(upd, cp, jnp.logical_and(part, carry["have_prev"]))
+        upd = self._local_train_shard(cp, t, consts)
+        cp = _select(upd, cp, part)
+
+        # --- request list (replicated cache) -----------------------------
+        cache_prev = carry["cache"]
+        if self.use_cache:
+            key_exp = (jax.random.fold_in(jax.random.PRNGKey(c.seed), t)
+                       if self.probabilistic_expiry else None)
+            miss = cache_lib.miss_mask(cache_prev, idx, t, self.D,
+                                       probabilistic=self.probabilistic_expiry,
+                                       key=key_exp)
+        else:
+            miss = jnp.ones(c.public_per_round, bool)
+        miss_f = miss.astype(jnp.float32)
+        n_req = jnp.sum(miss_f)
+        base, base_present = cache_lib.cached_at(cache_prev, idx)
+
+        # --- uplink + two-phase aggregation ------------------------------
+        x_round = consts["x_pub"][idx]
+        z_all = predict_v(cp, x_round)                 # (kloc, m, N)
+        z_all = s.transmit(z_all, None)
+        if not self.codec_up.is_identity:
+            z_all = self.codec_up.roundtrip(z_all, base=base,
+                                            present=base_present)
+        um = s.upload_mask(z_all)
+        partials = jax.lax.psum(
+            s.partial_aggregate(z_all, part_f, um, t), CLIENT_AXIS)
+        fresh = s.finalize_aggregate(partials, t)      # replicated
+        if not self.codec_down.is_identity:
+            fresh = self.codec_down.roundtrip(fresh, base=base,
+                                              present=base_present)
+
+        # --- teacher + cache + server distill (replicated) ---------------
+        cache = cache_prev
+        if self.use_cache:
+            teacher = cache_lib.assemble_teacher(cache_prev, idx, fresh, miss)
+            new_cache, _ = cache_lib.update_global_cache(
+                cache_prev, idx, teacher, miss, t)
+            cache = gate(new_cache, cache_prev)
+        else:
+            teacher = fresh
+        sp = distill(carry["server_params"], x_round, teacher,
+                     c.lr_dist, c.distill_steps)
+        server_params = gate(sp, carry["server_params"])
+
+        zv = predict_v(cp, consts["x_pub_val"])        # (kloc, n_val, N)
+        zv_sum = jax.lax.psum(jnp.sum(zv, axis=0), CLIENT_AXIS)
+        teacher_val = jnp.where(any_p, zv_sum / K, carry["teacher_val"])
+        have_tv = jnp.logical_or(carry["have_tv"], any_p)
+
+        prev_teacher = jnp.where(any_p, teacher, carry["prev_teacher"])
+        prev_idx = jnp.where(any_p, idx, carry["prev_idx"])
+        have_prev = jnp.logical_or(carry["have_prev"], any_p)
+
+        # --- shard-aware byte accounting ---------------------------------
+        catch_up = 0.0
+        if self.use_cache:  # per-shard stragglers -> psum'd global bytes
+            catch_up = cache_lib.catch_up_bytes_device(
+                cache_prev, carry["last_sync"], part, t,
+                axis_name=CLIENT_AXIS)
+        n_up = n_req
+        if um is not None:  # Selective-FD: psum the uploaded-entry count
+            uploaded_total = jax.lax.psum(jnp.sum(
+                um.astype(jnp.float32) * part_f[:, None] * miss_f[None, :]),
+                CLIENT_AXIS)
+            n_up = uploaded_total / jnp.maximum(n_part, 1.0)
+        uplink, downlink = comm_lib.distillation_round_cost_device(
+            n_clients=jnp.sum(part_f),  # per-shard count; psum'd inside
+            n_selected=float(c.public_per_round),
+            n_up_samples=n_up,
+            n_down_samples=n_req,
+            n_classes=c.n_classes,
+            uplink_bits=s.uplink_bits,
+            downlink_bits=s.downlink_bits,
+            with_cache_signals=self.use_cache,
+            catch_up_down=catch_up,
+            bytes_index=c.index_bytes,
+            uplink_codec=self.codec_up,
+            downlink_codec=self.codec_down,
+            axis_name=CLIENT_AXIS,
+        )
+        uplink = jnp.where(any_p, uplink, 0.0)
+        downlink = jnp.where(any_p, downlink, 0.0)
+        last_sync = jnp.where(part, t, carry["last_sync"])
+
+        # --- eval: shard-local partial sums under the cond, psum outside
+        # (collectives stay unconditional; do_eval is replicated) ---------
+        def _eval_local():
+            sa = accuracy(server_params, consts["x_test"], consts["y_test"],
+                          jnp.ones(consts["y_test"].shape[0]))
+            ca_part = jnp.sum(accuracy_v(cp, consts["xts"], consts["yts"],
+                                         consts["tmask"].astype(jnp.float32)))
+            sv = val_loss_soft(server_params, consts["x_pub_val"], teacher_val)
+            cv_part = jnp.sum(val_loss_hard_v(
+                cp, consts["xs"], consts["ys"],
+                consts["val_mask"].astype(jnp.float32)))
+            return sa, ca_part, sv, cv_part
+
+        sa, ca_part, sv, cv_part = jax.lax.cond(
+            do_eval, _eval_local, lambda: (jnp.float32(0),) * 4)
+        ca = jax.lax.psum(ca_part, CLIENT_AXIS) / K
+        cv = jax.lax.psum(cv_part, CLIENT_AXIS) / K
+
+        new_carry = dict(
+            client_params=cp,
+            server_params=server_params,
+            cache=cache,
+            prev_teacher=prev_teacher,
+            prev_idx=prev_idx,
+            have_prev=have_prev,
+            teacher_val=teacher_val,
+            have_tv=have_tv,
+            last_sync=last_sync,
+        )
+        ys = dict(uplink=uplink, downlink=downlink,
+                  server_acc=sa, client_acc=ca, server_val=sv, client_val=cv,
+                  have_tv=have_tv)
+        return new_carry, ys
+
+    # ------------------------------------------------------------------
+    def _run_rounds(self, ts, offline, do_eval):
+        consts = self._consts()
+        if self._shard_fn is None:
+            carry_specs, xs_specs, consts_specs = self._specs()
+            in_specs = (carry_specs, xs_specs, consts_specs)
+
+            def scan_all(carry, xs, consts):
+                return jax.lax.scan(
+                    lambda cr, x: self._round_device_sharded(cr, x, consts),
+                    carry, xs)
+
+            # pin input shardings so chained run() calls hit one compile:
+            # the first call feeds host/single-device arrays, later calls
+            # feed the previous run's already-sharded outputs
+            shardings = jax.tree_util.tree_map(
+                lambda s: NamedSharding(self.mesh, s), in_specs,
+                is_leaf=lambda x: isinstance(x, P))
+            self._shard_fn = jax.jit(
+                _shard_map_fn(scan_all, mesh=self.mesh, in_specs=in_specs,
+                              out_specs=(carry_specs, P()),
+                              check_rep=False),
+                in_shardings=shardings)
+        return self._shard_fn(self._initial_carry(),
+                              (ts, offline, do_eval), consts)

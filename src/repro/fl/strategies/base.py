@@ -8,7 +8,7 @@ two.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -44,13 +44,51 @@ class Strategy:
     def aggregate(self, z_clients, upload_mask, t) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
         raise NotImplementedError
 
-    # Fixed-shape twin of ``aggregate`` for the scanned engine: the full
-    # (K, m, N) stack plus a float {0,1} participation vector ``part``
-    # (K,) instead of a dynamically-sized subset.  Must equal
-    # ``aggregate(z[part], ...)`` up to float reduction order.  The
-    # default participation-weighted mean is correct for any strategy
-    # whose aggregate is the plain mean.
+    # ------------------------------------------------------------------
+    # Fixed-shape masked aggregation: the two-phase contract.
+    #
+    # Sharded engines cannot run ``aggregate`` (dynamic subset) or even a
+    # monolithic masked aggregate (the client stack never exists on one
+    # device), so masked aggregation is split into:
+    #
+    #   ``partial_aggregate``  per-shard LINEAR moments of the local
+    #                          (K_loc, m, N) stack — a dict of arrays
+    #                          whose entries sum across shards;
+    #   (cross-shard psum of every dict entry, done by the engine —
+    #    a no-op on a single device);
+    #   ``finalize_aggregate`` the nonlinearity (Enhanced-ERA power
+    #                          sharpening, DS-FL temperature softmax,
+    #                          Selective-FD ratio+fallback), applied once
+    #                          on the replicated reduction.
+    #
+    # Contract (property-tested in tests/test_aggregation_contract.py):
+    # for any split of the client axis into shards,
+    #   finalize(sum over shards of partial(shard)) ==
+    #   aggregate_masked(unsplit stack)                (allclose)
+    # and ``aggregate_masked`` itself must equal ``aggregate(z[part])``
+    # up to float reduction order.  The defaults below implement the
+    # participation-weighted mean, correct for any strategy whose
+    # aggregate is the plain mean.
+
+    def partial_aggregate(self, z_clients: jnp.ndarray, part: jnp.ndarray,
+                          upload_mask: Optional[jnp.ndarray],
+                          t) -> Dict[str, jnp.ndarray]:
+        """Per-shard linear moments; every entry sums across shards."""
+        return {"zsum": jnp.tensordot(part, z_clients, axes=(0, 0)),
+                "wsum": jnp.sum(part)}
+
+    def finalize_aggregate(self, partials: Dict[str, jnp.ndarray],
+                           t) -> jnp.ndarray:
+        """Teacher from the cross-shard-reduced moments (replicated)."""
+        return partials["zsum"] / jnp.maximum(partials["wsum"], 1.0)
+
+    # Fixed-shape twin of ``aggregate``: the full (K, m, N) stack plus a
+    # float {0,1} participation vector ``part`` (K,) instead of a
+    # dynamically-sized subset.  Default: the two phases composed on one
+    # device.  Strategies may override with a fused single-device fast
+    # path (e.g. SCARLET's Pallas mean+sharpen kernel) as long as it
+    # stays allclose to the two-phase composition.
     def aggregate_masked(self, z_clients: jnp.ndarray, part: jnp.ndarray,
                          upload_mask: Optional[jnp.ndarray], t) -> jnp.ndarray:
-        w = part / jnp.maximum(jnp.sum(part), 1.0)
-        return jnp.tensordot(w, z_clients, axes=(0, 0))
+        return self.finalize_aggregate(
+            self.partial_aggregate(z_clients, part, upload_mask, t), t)

@@ -18,6 +18,8 @@ class ERAStrategy(Strategy):
     def aggregate(self, z, um, t):
         return era_lib.era(jnp.mean(z, axis=0), self.opts.get("T", 0.1)), None
 
-    def aggregate_masked(self, z, part, um, t):
-        zbar = super().aggregate_masked(z, part, None, t)
+    # Two-phase contract: linear phase inherited (weighted sum); the
+    # temperature softmax runs once on the reduced mean.
+    def finalize_aggregate(self, partials, t):
+        zbar = super().finalize_aggregate(partials, t)
         return era_lib.era(zbar, self.opts.get("T", 0.1))

@@ -9,6 +9,9 @@ __all__ = ["MeanStrategy"]
 
 
 class MeanStrategy(Strategy):
+    """Inherits the base two-phase masked aggregation unchanged: the
+    participation-weighted mean is the whole method."""
+
     name = "mean"
     scan_safe = True
 

@@ -46,14 +46,29 @@ class EnhancedERAStrategy(Strategy):
             return era_lib.enhanced_era(zbar, self._adaptive_beta(zbar)), None
         return kops.enhanced_era_fused(z, beta), None
 
-    def aggregate_masked(self, z, part, um, t):
+    # Two-phase contract: the linear phase is the participation-weighted
+    # sum (inherited); the sharpening nonlinearity runs once on the
+    # cross-shard-reduced mean, so shards never exchange full stacks.
+    def finalize_aggregate(self, partials, t):
+        zbar = super().finalize_aggregate(partials, t)
         beta = self.opts.get("beta", 1.5)
         if beta == "adaptive":
-            zbar = super().aggregate_masked(z, part, None, t)
-            return era_lib.enhanced_era(zbar, self._adaptive_beta(zbar))
-        # Rescale so the kernel's sum/K over the full stack equals the
-        # participant mean: z_k * part_k * (K / n_part).
+            beta = self._adaptive_beta(zbar)
+        return era_lib.enhanced_era(zbar, beta)
+
+    def aggregate_masked(self, z, part, um, t):
+        beta = self.opts.get("beta", 1.5)
+        if beta == "adaptive":  # needs zbar twice -> two-phase path
+            return super().aggregate_masked(z, part, um, t)
+        # Single-device fast path: the fused kernel computes sum/K +
+        # sharpening in one VMEM pass; rescale so its sum/K over the
+        # full stack equals the participant mean: z_k*part_k*(K/n_part).
         k_clients = z.shape[0]
         n_part = jnp.maximum(jnp.sum(part), 1.0)
         zw = z * (part * (k_clients / n_part))[:, None, None]
-        return kops.enhanced_era_fused(zw, beta)
+        out = kops.enhanced_era_fused(zw, beta)
+        # total outage: the kernel's zero-input behavior differs from the
+        # two-phase path's uniform teacher.  Engines gate these rounds
+        # out entirely, but the two-phase contract is total, so align.
+        return jnp.where(jnp.sum(part) > 0, out,
+                         jnp.full_like(out, 1.0 / out.shape[-1]))

@@ -35,12 +35,19 @@ class SelectiveFDStrategy(Strategy):
         empty = (jnp.sum(um, axis=0) == 0)[:, None]
         return jnp.where(empty, jnp.mean(z, axis=0), teacher), None
 
-    def aggregate_masked(self, z, part, um, t):
+    # Two-phase contract: the linear phase carries the upload-weighted
+    # sums alongside the inherited participant sums (for the fallback);
+    # the ratio + empty-sample fallback run on the reduced moments.
+    def partial_aggregate(self, z, part, um, t):
+        p = super().partial_aggregate(z, part, None, t)
         w = (um.astype(z.dtype) * part[:, None])[..., None]   # (K, m, 1)
-        num = jnp.sum(z * w, axis=0)
-        den = jnp.maximum(jnp.sum(w, axis=0), 1e-9)
-        teacher = num / den
+        p["up_num"] = jnp.sum(z * w, axis=0)
+        p["up_den"] = jnp.sum(w, axis=0)
+        return p
+
+    def finalize_aggregate(self, partials, t):
+        den = partials["up_den"]
+        teacher = partials["up_num"] / jnp.maximum(den, 1e-9)
         # samples no participant uploaded: participant-mean fallback
-        empty = (jnp.sum(w, axis=0) < 0.5)
-        fallback = super().aggregate_masked(z, part, None, t)
-        return jnp.where(empty, fallback, teacher)
+        fallback = super().finalize_aggregate(partials, t)
+        return jnp.where(den < 0.5, fallback, teacher)

@@ -1,5 +1,14 @@
 """Shared test configuration.
 
+Forces a multi-device host platform: ``XLA_FLAGS`` gets
+``--xla_force_host_platform_device_count=8`` (unless the flag is
+already set) *before* anything imports jax, so the client-sharded
+``shard_map`` engine runs against a real 8-device mesh in every test
+environment — the conformance matrix must never silently degenerate to
+a single shard.  Override by exporting the flag yourself (e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=1`` to reproduce a
+single-device failure).
+
 Guards hypothesis-based modules: when `hypothesis` is not installed,
 a minimal stub is injected into ``sys.modules`` so that
 
@@ -13,11 +22,23 @@ would, which can't be used directly since it would find the stub) — the
 suite degrades to *skips* instead of collection errors.  Plain
 (non-property) tests in the same modules keep running.  With hypothesis
 installed the stub is never created and everything runs for real.
+
+Environments that *promise* hypothesis (CI exports
+``REPRO_REQUIRE_HYPOTHESIS=1``) fail collection instead of stubbing, so
+the property tests can never silently skip where they are supposed to
+run.
 """
 from __future__ import annotations
 
+import os
 import sys
 import types
+
+# Must precede any jax import (the device count is locked at first init).
+_XLA_DEV_FLAG = "xla_force_host_platform_device_count"
+if _XLA_DEV_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --{_XLA_DEV_FLAG}=8").strip()
 
 import pytest
 
@@ -27,6 +48,12 @@ try:
     HAVE_HYPOTHESIS = True
 except ImportError:
     HAVE_HYPOTHESIS = False
+
+if not HAVE_HYPOTHESIS and os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+    raise RuntimeError(
+        "REPRO_REQUIRE_HYPOTHESIS is set but hypothesis is not importable — "
+        "property tests would silently degrade to skips. Install the dev "
+        "extra: pip install -e '.[dev]'")
 
 
 class _StubStrategy:

@@ -1,0 +1,117 @@
+"""Property tests: the two-phase partial/finalize aggregation contract.
+
+The client-sharded engine never materializes the full (K, m, N) stack:
+each shard computes ``Strategy.partial_aggregate`` on its local clients,
+the engine psums the moment dicts entrywise, and
+``Strategy.finalize_aggregate`` applies the nonlinearity once on the
+reduction.  The contract that makes this correct — for *any* split of
+the client axis into shards,
+
+    finalize(sum over shards of partial(shard)) ==
+    aggregate_masked(unsplit stack)            (allclose)
+
+— is asserted here for every scan-safe strategy over random stacks,
+random participation masks (including all-masked shards and fully
+masked rounds), and random shard splits.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.fl.strategies import STRATEGIES
+
+# every scan-safe strategy (COMET is host-only by design), plus the
+# adaptive-beta SCARLET variant whose finalize derives beta from the
+# reduced mean itself
+SCAN_SAFE = {
+    name: (lambda cls=cls: cls())
+    for name, cls in STRATEGIES.items() if cls().scan_safe
+}
+SCAN_SAFE["scarlet_adaptive"] = lambda: STRATEGIES["scarlet"](beta="adaptive")
+
+
+def _tree_sum(dicts):
+    """Entrywise sum of the per-shard moment dicts — the psum stand-in."""
+    out = {}
+    for d in dicts:
+        for k, v in d.items():
+            out[k] = v if k not in out else out[k] + v
+    return out
+
+
+def _stack(seed, K, m, N):
+    key = jax.random.PRNGKey(seed)
+    z = jax.random.dirichlet(key, jnp.ones(N), (K, m))
+    part = (jax.random.uniform(jax.random.fold_in(key, 1), (K,)) < 0.6)
+    um = (jax.random.uniform(jax.random.fold_in(key, 2), (K, m)) < 0.5)
+    return z, part.astype(jnp.float32), um
+
+
+def _split_points(cuts, K):
+    """Sorted interior cut points -> contiguous shard slices of 0..K."""
+    pts = sorted({min(c, K - 1) for c in cuts} - {0})
+    return [0] + pts + [K]
+
+
+def _check_contract(strat, z, part, um, bounds, rtol=1e-4, atol=1e-5):
+    whole = strat.aggregate_masked(z, part, um, 0)
+    partials = _tree_sum([
+        strat.partial_aggregate(z[a:b], part[a:b],
+                                None if um is None else um[a:b], 0)
+        for a, b in zip(bounds[:-1], bounds[1:])
+    ])
+    sharded = strat.finalize_aggregate(partials, 0)
+    np.testing.assert_allclose(np.asarray(sharded), np.asarray(whole),
+                               rtol=rtol, atol=atol)
+
+
+@settings(max_examples=120, deadline=None)
+@given(name=st.sampled_from(sorted(SCAN_SAFE)),
+       seed=st.integers(0, 2**31 - 1),
+       K=st.integers(2, 10),
+       m=st.integers(1, 5),
+       N=st.integers(2, 8),
+       cuts=st.sets(st.integers(1, 9), min_size=0, max_size=4))
+def test_partial_finalize_matches_aggregate_masked(name, seed, K, m, N, cuts):
+    strat = SCAN_SAFE[name]()
+    z, part, um = _stack(seed, K, m, N)
+    _check_contract(strat, z, part, um if strat.upload_mask(z) is not None
+                    else None, _split_points(cuts, K))
+
+
+@pytest.mark.parametrize("name", sorted(SCAN_SAFE))
+def test_contract_with_all_masked_shard(name):
+    """A shard whose clients all sat the round out contributes zero
+    moments — the reduction must be unaffected by how zeros group."""
+    strat = SCAN_SAFE[name]()
+    z, _, um = _stack(7, 6, 3, 4)
+    part = jnp.asarray([0.0, 0.0, 0.0, 1.0, 1.0, 0.0])  # shard [0:3] empty
+    um = um if strat.upload_mask(z) is not None else None
+    _check_contract(strat, z, part, um, [0, 3, 6])
+
+
+@pytest.mark.parametrize("name", sorted(SCAN_SAFE))
+def test_contract_with_no_participants_at_all(name):
+    """Total outage: every guard (max(wsum, 1), upload fallbacks) must
+    behave identically split and unsplit — no NaNs, no mismatches."""
+    strat = SCAN_SAFE[name]()
+    z, _, um = _stack(11, 4, 2, 5)
+    part = jnp.zeros(4, jnp.float32)
+    um = um if strat.upload_mask(z) is not None else None
+    _check_contract(strat, z, part, um, [0, 1, 4])
+    whole = strat.aggregate_masked(z, part, um, 0)
+    assert np.isfinite(np.asarray(whole)).all()
+
+
+@pytest.mark.parametrize("name", sorted(SCAN_SAFE))
+def test_single_shard_split_is_trivially_exact(name):
+    """One shard = the scanned engine's layout: the composition must
+    reproduce aggregate_masked (bitwise for pure-jnp defaults is not
+    required — allclose covers kernel fast paths too)."""
+    strat = SCAN_SAFE[name]()
+    z, part, um = _stack(3, 5, 4, 3)
+    um = um if strat.upload_mask(z) is not None else None
+    _check_contract(strat, z, part, um, [0, 5])

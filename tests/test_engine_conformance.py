@@ -1,0 +1,192 @@
+"""Cross-engine conformance matrix: host x scan x shard.
+
+All three engines draw subsets/participation from the identical jax key
+stream, so for every (strategy, participation, codec) cell of the matrix
+the same rounds run with the same cohorts.  Each cell is one test item
+that runs every engine exactly once and asserts both pairwise
+contracts (one item per cell also keeps xdist from recomputing cells):
+
+- **host vs scan** — ledger allclose at float32 exactness (the host loop
+  computes costs in python float64, the device engines in float32),
+  metrics/cache allclose;
+- **scan vs shard** — ledger **byte-identical** (both engines derive
+  every cost from exact small-integer counts in float32; the shard
+  engine's psum reductions of exact integers are order-independent),
+  metrics/cache allclose (aggregation reduction order differs).
+
+The shard runs use ``make_test_mesh``-shaped meshes on the 8 forced
+host devices (see ``conftest.py``), so the ``shard_map`` paths —
+two-phase aggregation psum, shard-aware byte accounting, conscription
+slicing — execute for real in every environment.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.fl import (
+    FederatedDistillation,
+    FLConfig,
+    Outage,
+    Scenario,
+    ScannedFederatedDistillation,
+    ShardedFederatedDistillation,
+    bernoulli_participation,
+    fixed_fraction,
+    full_participation,
+)
+from repro.fl.strategies import STRATEGIES
+
+CFG = FLConfig(
+    n_clients=4, n_classes=4, dim=8, rounds=3, local_steps=2,
+    distill_steps=2, public_size=48, public_per_round=10,
+    private_size=64, alpha=0.5, eval_every=2, seed=0, hidden=12,
+    mesh_spec="2x4",
+)
+
+STRATEGY_KW = {
+    "scarlet": dict(beta=1.5),
+    "dsfl": dict(T=0.1),
+    "mean": dict(),
+}
+# scarlet runs with its synchronized cache so cache_delta coding and
+# catch-up packages are exercised against real cache state
+CACHE_D = {"scarlet": 3, "dsfl": 0, "mean": 0}
+
+PARTICIPATIONS = {
+    "full": Scenario(participation=full_participation()),
+    "bernoulli": Scenario(participation=bernoulli_participation(0.5)),
+    # outage windows + fixed-fraction sampling: returning stragglers
+    # exercise the catch-up byte accounting (dense/psum'd vs per-package)
+    "outage": Scenario(participation=fixed_fraction(0.5),
+                       outages=(Outage(0, 2, 3), Outage(2, 1, 2))),
+}
+
+CODECS = ("identity", "quant8", "cache_delta+quant8")
+
+MATRIX = [(s, p, c) for s in sorted(STRATEGY_KW)
+          for p in sorted(PARTICIPATIONS) for c in CODECS]
+
+
+# ---------------------------------------------------------------------------
+# Parity assertion, shared with tests/test_scan_parity.py
+# ---------------------------------------------------------------------------
+
+def assert_parity(eng_a, hist_a, eng_b, hist_b, *, ledger="close"):
+    """Engine/History pair parity.  ``ledger="exact"`` demands bitwise
+    byte-identity (device engine vs device engine); ``"close"`` allows
+    float32-level rounding (host float64 vs device float32)."""
+    up_a = [r.uplink for r in hist_a.ledger.rounds]
+    up_b = [r.uplink for r in hist_b.ledger.rounds]
+    down_a = [r.downlink for r in hist_a.ledger.rounds]
+    down_b = [r.downlink for r in hist_b.ledger.rounds]
+    assert len(up_a) == len(up_b)
+    if ledger == "exact":
+        np.testing.assert_array_equal(up_a, up_b)
+        np.testing.assert_array_equal(down_a, down_b)
+    else:
+        np.testing.assert_allclose(up_a, up_b, rtol=1e-7)
+        np.testing.assert_allclose(down_a, down_b, rtol=1e-7)
+    # --- History metrics ----------------------------------------------
+    assert hist_a.rounds == hist_b.rounds
+    np.testing.assert_allclose(hist_a.server_acc, hist_b.server_acc, atol=1e-4)
+    np.testing.assert_allclose(hist_a.client_acc, hist_b.client_acc, atol=1e-4)
+    np.testing.assert_allclose(hist_a.cumulative_mb, hist_b.cumulative_mb,
+                               rtol=1e-7)
+    np.testing.assert_allclose(hist_a.server_val_loss, hist_b.server_val_loss,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(hist_a.client_val_loss, hist_b.client_val_loss,
+                               rtol=1e-4, atol=1e-5)
+    # --- cache state + sync bookkeeping -------------------------------
+    np.testing.assert_array_equal(np.asarray(eng_a.cache_g.present),
+                                  np.asarray(eng_b.cache_g.present))
+    np.testing.assert_array_equal(np.asarray(eng_a.cache_g.ts),
+                                  np.asarray(eng_b.cache_g.ts))
+    np.testing.assert_allclose(np.asarray(eng_a.cache_g.values),
+                               np.asarray(eng_b.cache_g.values), atol=1e-5)
+    np.testing.assert_array_equal(eng_a.last_sync, eng_b.last_sync)
+
+
+def _build(engine_cls, name, participation, codec, **kw):
+    cfg = dataclasses.replace(CFG, uplink_codec=codec)
+    eng = engine_cls(cfg, STRATEGIES[name](**STRATEGY_KW[name]),
+                     cache_duration=CACHE_D[name],
+                     scenario=PARTICIPATIONS[participation], **kw)
+    return eng, eng.run()
+
+
+@pytest.mark.parametrize("name,participation,codec", MATRIX,
+                         ids=["-".join(p) for p in MATRIX])
+def test_engine_conformance_cell(name, participation, codec):
+    """One matrix cell: each engine runs once, then both pairwise parity
+    contracts are asserted.  A single test item per cell keeps the
+    three engine runs computed exactly once per pytest/xdist worker."""
+    host = _build(FederatedDistillation, name, participation, codec,
+                  rng_backend="jax")
+    scan = _build(ScannedFederatedDistillation, name, participation, codec)
+    shard = _build(ShardedFederatedDistillation, name, participation, codec)
+    assert_parity(*host, *scan, ledger="close")
+    assert_parity(*scan, *shard, ledger="exact")
+
+
+# ---------------------------------------------------------------------------
+# Shard-engine specifics not covered by the matrix
+# ---------------------------------------------------------------------------
+
+def test_shard_engine_data_only_mesh():
+    """A 4x1 mesh (one client per shard, no model axis) must agree with
+    the 2x4 matrix mesh — the shard count is an implementation detail."""
+    a, ha = _build(ShardedFederatedDistillation, "scarlet", "bernoulli",
+                   "identity")
+    cfg = dataclasses.replace(CFG, uplink_codec="identity", mesh_spec="4")
+    b = ShardedFederatedDistillation(
+        cfg, STRATEGIES["scarlet"](**STRATEGY_KW["scarlet"]),
+        cache_duration=CACHE_D["scarlet"],
+        scenario=PARTICIPATIONS["bernoulli"])
+    hb = b.run()
+    assert_parity(a, ha, b, hb, ledger="exact")
+
+
+def test_shard_engine_heterogeneous_schedules():
+    """Per-client local-step counts / lr scales ride the client shard
+    (``lr_k``/``steps_k`` consts are partitioned): sharded and scanned
+    runs must still agree byte-exactly on the ledger."""
+    from repro.fl import Heterogeneity
+
+    het = Heterogeneity(local_steps=(1, 2, 3, 2), lr_scale=(1.0, 0.5, 2.0, 1.0),
+                        lr_decay=0.9)
+    sc = Scenario(participation=bernoulli_participation(0.7),
+                  heterogeneity=het)
+    scan = ScannedFederatedDistillation(
+        CFG, STRATEGIES["scarlet"](beta=1.5), cache_duration=3, scenario=sc)
+    shard = ShardedFederatedDistillation(
+        CFG, STRATEGIES["scarlet"](beta=1.5), cache_duration=3, scenario=sc)
+    assert_parity(scan, scan.run(), shard, shard.run(), ledger="exact")
+
+
+def test_shard_engine_rejects_bad_meshes():
+    strat = STRATEGIES["scarlet"](beta=1.5)
+    with pytest.raises(ValueError, match="divide evenly"):
+        ShardedFederatedDistillation(
+            dataclasses.replace(CFG, n_clients=6), strat, cache_duration=3,
+            mesh="4x2")
+    with pytest.raises(ValueError, match="unknown mesh_spec"):
+        ShardedFederatedDistillation(CFG, strat, cache_duration=3,
+                                     mesh="not-a-mesh")
+    with pytest.raises(ValueError):  # scan-engine mode checks inherited
+        ShardedFederatedDistillation(CFG, STRATEGIES["comet"](), mesh="2x4")
+
+
+def test_run_method_shard_engine():
+    from repro.fl import run_method
+
+    cfg = dataclasses.replace(CFG, mesh_spec="4x2")
+    h_scan = run_method("scarlet", cfg, cache_duration=3, beta=1.5,
+                        engine="scan", rounds=2)
+    h_shard = run_method("scarlet", cfg, cache_duration=3, beta=1.5,
+                        engine="shard", rounds=2)
+    np.testing.assert_array_equal(
+        [r.uplink for r in h_scan.ledger.rounds],
+        [r.uplink for r in h_shard.ledger.rounds])
+    np.testing.assert_allclose(h_scan.server_acc, h_shard.server_acc,
+                               atol=1e-4)
