@@ -1,0 +1,118 @@
+"""Heterogeneous client-model cohorts: the paper's motivating workload.
+
+Distillation-based FL exchanges soft-labels, so clients can run
+*different architectures* — the central argument for the method family
+over parameter sharing (FedMD; Sattler et al.; Itahara et al.).  This
+sweep measures what that costs and buys on the synthetic task:
+
+- **cohort mixes** (homogeneous vs 2- and 3-cohort splits around the
+  same parameter budget) under SCARLET with the synchronized cache, on
+  the scanned engine: final server/per-cohort client accuracy, exact
+  communication, and wall-clock.  The ledger columns demonstrate the
+  cohort invariant end to end: communication is *identical* across
+  mixes, because the wire carries soft-labels whose shape does not
+  depend on the client architecture.
+- **scan vs shard** on the 3-cohort mix at larger K: the sharded engine
+  partitions every cohort block over the mesh "data" axis
+  (``best_data_axis`` keeps the sweep portable across device counts),
+  so heterogeneous cohorts scale past one chip exactly like homogeneous
+  ones.
+
+``--quick`` (via run.py) shrinks rounds/K to CI-smoke sizes.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+from benchmarks._common import emit
+from repro.fl import (
+    CohortSpec,
+    ScannedFederatedDistillation,
+    ShardedFederatedDistillation,
+    FLConfig,
+)
+from repro.fl.shard_engine import best_data_axis
+from repro.fl.strategies import STRATEGIES
+
+ROUNDS = 40
+SHARD_ROUNDS = 10
+SHARD_CLIENTS = 48
+QUICK_ROUNDS = 6
+QUICK_SHARD_CLIENTS = 8
+
+
+def _cfg(n_clients: int, rounds: int, cohorts=None, **kw) -> FLConfig:
+    base = dict(
+        n_clients=n_clients, n_classes=10, dim=16, rounds=rounds,
+        local_steps=3, distill_steps=3, public_size=600,
+        public_per_round=80, private_size=900, alpha=0.05,
+        cluster_scale=2.0, noise=2.5, hidden=48, mlp_depth=2,
+        eval_every=rounds, seed=0, cohorts=cohorts)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _mixes(n_clients: int) -> dict:
+    """Cohort mixes around the homogeneous (48, 2) parameter budget;
+    sizes chosen to divide any test-mesh shard count."""
+    a, b = n_clients // 2, n_clients - n_clients // 2
+    t = n_clients // 4
+    return {
+        "homog": None,
+        "2cohort": (CohortSpec(a, 64, 2), CohortSpec(b, 32, 1)),
+        "3cohort": (CohortSpec(n_clients - 2 * t, 64, 3),
+                    CohortSpec(t, 48, 2), CohortSpec(t, 24, 1)),
+    }
+
+
+def _run_timed(engine, rounds: int):
+    engine.run(rounds)  # warmup leg: compile once
+    t0 = time.perf_counter()
+    hist = engine.run(rounds)
+    return hist, time.perf_counter() - t0
+
+
+def run(quick: bool = False):
+    rounds = QUICK_ROUNDS if quick else ROUNDS
+    n_clients = 8 if quick else 12
+    rows = []
+
+    # --- cohort mixes on the scanned engine ---------------------------
+    for mix_name, cohorts in _mixes(n_clients).items():
+        eng = ScannedFederatedDistillation(
+            _cfg(n_clients, rounds, cohorts=cohorts),
+            STRATEGIES["scarlet"](beta=1.5), cache_duration=25)
+        hist, dt = _run_timed(eng, rounds)
+        cacc = "/".join(f"{a:.3f}" for a in hist.cohort_client_acc[-1])
+        rows.append(dict(
+            name=f"hetero_scan_{mix_name}",
+            us_per_call=dt / rounds * 1e6,
+            derived=(f"srv_acc={hist.final_server_acc:.3f} "
+                     f"cohort_acc={cacc} "
+                     f"comm_mb={hist.ledger.cumulative_total / 1e6:.3f} "
+                     f"models={eng.models.describe()}")))
+
+    # --- 3-cohort mix: scan vs client-sharded -------------------------
+    k_shard = QUICK_SHARD_CLIENTS if quick else SHARD_CLIENTS
+    s_rounds = QUICK_ROUNDS if quick else SHARD_ROUNDS
+    cohorts = _mixes(k_shard)["3cohort"]
+    # the data axis must divide EVERY cohort block, not just K — size it
+    # from the gcd of the cohort sizes (device-count-portable)
+    d = best_data_axis(math.gcd(*(c.n_clients for c in cohorts)))
+    cfg = _cfg(k_shard, s_rounds, cohorts=cohorts, mesh_spec=f"{d}")
+    for label, cls in (("scan", ScannedFederatedDistillation),
+                       ("shard", ShardedFederatedDistillation)):
+        eng = cls(cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=25)
+        hist, dt = _run_timed(eng, s_rounds)
+        rows.append(dict(
+            name=f"hetero_{label}_K{k_shard}",
+            us_per_call=dt / s_rounds * 1e6,
+            derived=(f"rounds_per_s={s_rounds / dt:.2f} "
+                     f"srv_acc={hist.final_server_acc:.3f} "
+                     f"devices={d if label == 'shard' else 1}")))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -18,6 +18,7 @@ from benchmarks import (
     codec_pareto,
     engine_bench,
     ext_beyond_paper,
+    hetero_bench,
     fig3_cache_sim,
     fig4_era_curves,
     fig5_era_vs_enhanced,
@@ -48,6 +49,7 @@ SUITE = {
     "kernels": (kernels_bench, {}),
     "engine": (engine_bench, {}),
     "codec_pareto": (codec_pareto, {}),
+    "hetero": (hetero_bench, {}),
     "ext": (ext_beyond_paper, {"rounds": 80}),
 }
 

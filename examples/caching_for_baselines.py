@@ -3,15 +3,23 @@ module for OTHER distillation-based FL methods (CFD / COMET /
 Selective-FD), D=25.
 
   PYTHONPATH=src python examples/caching_for_baselines.py
+
+REPRO_EXAMPLES_QUICK=1 shrinks the runs to CI-smoke size (same code
+path, toy rounds — tests/test_examples.py runs every example this way).
 """
+import os
+
 from repro.fl.engine import FLConfig, run_method
+
+QUICK = bool(os.environ.get("REPRO_EXAMPLES_QUICK"))
 
 
 def main():
     cfg = FLConfig(
-        n_clients=12, n_classes=10, dim=16, rounds=80,
+        n_clients=12, n_classes=10, dim=16, rounds=6 if QUICK else 80,
         public_size=1200, public_per_round=120, private_size=1500,
-        alpha=0.05, cluster_scale=2.0, noise=2.5, eval_every=20,
+        alpha=0.05, cluster_scale=2.0, noise=2.5,
+        eval_every=3 if QUICK else 20,
     )
     for method, kw in (("cfd", {}), ("comet", {"n_clusters": 2}),
                        ("selective_fd", {"tau_client": 0.0625})):

@@ -5,12 +5,19 @@ analytic payload bytes), then plugs codecs into a SCARLET run on the
 scanned engine and prints the uplink-vs-accuracy trade-off.
 
   PYTHONPATH=src python examples/codec_quickstart.py
+
+REPRO_EXAMPLES_QUICK=1 shrinks the FL runs to CI-smoke size (same code
+path, toy rounds — tests/test_examples.py runs every example this way).
 """
+import os
+
 import jax
 import jax.numpy as jnp
 
 from repro.compress import get_codec
 from repro.fl import FLConfig, run_method
+
+QUICK = bool(os.environ.get("REPRO_EXAMPLES_QUICK"))
 
 
 def main():
@@ -27,9 +34,10 @@ def main():
 
     # --- codecs in a full FL run -------------------------------------------
     cfg = FLConfig(
-        n_clients=8, n_classes=10, dim=16, rounds=40,
+        n_clients=8, n_classes=10, dim=16, rounds=6 if QUICK else 40,
         public_size=800, public_per_round=100, private_size=1000,
-        alpha=0.05, cluster_scale=2.0, noise=2.5, eval_every=10, seed=0,
+        alpha=0.05, cluster_scale=2.0, noise=2.5,
+        eval_every=3 if QUICK else 10, seed=0,
     )
     print("\nSCARLET (cache D=25) with different uplink codecs:")
     base_up = None

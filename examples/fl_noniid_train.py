@@ -3,12 +3,18 @@ spectrum, with all baselines, several hundred rounds, multi-seed — the
 synthetic-scale analog of the paper's main comparison (Fig. 8).
 
   PYTHONPATH=src python examples/fl_noniid_train.py [--rounds 300] [--seeds 3]
+
+REPRO_EXAMPLES_QUICK=1 switches the argparse defaults to CI-smoke
+sizes (same code path — tests/test_examples.py runs it this way).
 """
 import argparse
+import os
 
 import numpy as np
 
 from repro.fl.engine import FLConfig, run_method
+
+QUICK = bool(os.environ.get("REPRO_EXAMPLES_QUICK"))
 
 METHODS = [
     ("scarlet", dict(cache_duration=25, beta=1.5)),
@@ -23,8 +29,8 @@ METHODS = [
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=300)
-    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=4 if QUICK else 300)
+    ap.add_argument("--seeds", type=int, default=1 if QUICK else 3)
     ap.add_argument("--alpha", type=float, default=0.05)
     args = ap.parse_args()
 

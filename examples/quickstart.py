@@ -5,20 +5,27 @@ Runs communication-efficient federated distillation (soft-label caching
 accuracy + exact communication costs vs the DS-FL baseline.
 
   PYTHONPATH=src python examples/quickstart.py
+
+REPRO_EXAMPLES_QUICK=1 shrinks the runs to CI-smoke size (same code
+path, toy rounds — tests/test_examples.py runs every example this way).
 """
+import os
+
 import jax.numpy as jnp
 
 from repro.core import cache, era
 from repro.fl.engine import FLConfig, run_method
 
+QUICK = bool(os.environ.get("REPRO_EXAMPLES_QUICK"))
+
 
 def main():
     cfg = FLConfig(
-        n_clients=8, n_classes=10, dim=16, rounds=40,
+        n_clients=8, n_classes=10, dim=16, rounds=6 if QUICK else 40,
         public_size=800, public_per_round=100, private_size=1000,
         alpha=0.05,            # strong non-IID (Dirichlet)
         cluster_scale=2.0, noise=2.5,
-        eval_every=10, seed=0,
+        eval_every=3 if QUICK else 10, seed=0,
     )
 
     # --- the two core primitives, standalone -------------------------------

@@ -3,8 +3,12 @@ prefill + token-by-token decode through the KV/SSM cache serve_step —
 the same code path the multi-pod dry-run lowers at 32k/500k.
 
   PYTHONPATH=src python examples/serve_demo.py [--arch mamba2-1.3b]
+
+REPRO_EXAMPLES_QUICK=1 switches the argparse defaults to CI-smoke
+sizes (same decode path — tests/test_examples.py runs it this way).
 """
 import argparse
+import os
 import time
 
 import jax
@@ -19,9 +23,10 @@ from repro.models import registry
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b", choices=sorted(ASSIGNED))
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen-len", type=int, default=24)
+    quick = bool(os.environ.get("REPRO_EXAMPLES_QUICK"))
+    ap.add_argument("--batch", type=int, default=2 if quick else 4)
+    ap.add_argument("--prompt-len", type=int, default=4 if quick else 16)
+    ap.add_argument("--gen-len", type=int, default=6 if quick else 24)
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch].reduced()  # CPU-sized variant of the family

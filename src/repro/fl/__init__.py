@@ -2,6 +2,7 @@
 client substrate.  See ``src/repro/fl/README.md`` for the layout."""
 from repro.fl.api import run_method  # noqa: F401
 from repro.fl.baselines import FedAvg, Individual  # noqa: F401
+from repro.fl.cohorts import ClientModels, CohortSpec, resolve_cohorts  # noqa: F401
 from repro.fl.config import FLConfig  # noqa: F401
 from repro.fl.rounds import FederatedDistillation, History  # noqa: F401
 from repro.fl.scan_engine import ScannedFederatedDistillation  # noqa: F401

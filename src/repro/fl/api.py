@@ -2,9 +2,10 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 from repro.fl.baselines import FedAvg, Individual
+from repro.fl.cohorts import CohortSpec
 from repro.fl.config import FLConfig
 from repro.fl.rounds import FederatedDistillation, History
 from repro.fl.scan_engine import ScannedFederatedDistillation
@@ -35,6 +36,7 @@ def run_method(
     rng_backend: Optional[str] = None,
     codec: Optional[str] = None,
     downlink_codec: Optional[str] = None,
+    cohorts: Optional[Sequence[CohortSpec]] = None,
     **strategy_kw,
 ) -> History:
     """Run one FL method end-to-end and return its History.
@@ -61,6 +63,14 @@ def run_method(
     ``"cache_delta+quant8"``) — shorthand for setting the corresponding
     ``FLConfig`` fields; the ledger switches to the codec's analytic
     payload accounting on that direction.
+
+    ``cohorts`` (a sequence of :class:`repro.fl.CohortSpec`, shorthand
+    for ``FLConfig.cohorts``) gives clients heterogeneous model
+    architectures — the distillation methods exchange only soft-labels,
+    so any strategy/codec/engine combination runs unchanged over a
+    cohort mix.  Parameter-sharing baselines (fedavg) and the
+    no-collaboration baseline reject cohorts: they assume the single
+    homogeneous ``(hidden, mlp_depth)`` model.
     """
     if engine not in _ENGINES:
         raise ValueError(f"unknown engine: {engine!r} "
@@ -69,7 +79,14 @@ def run_method(
         cfg = dataclasses.replace(cfg, uplink_codec=codec)
     if downlink_codec is not None:
         cfg = dataclasses.replace(cfg, downlink_codec=downlink_codec)
+    if cohorts is not None:
+        cfg = dataclasses.replace(cfg, cohorts=tuple(cohorts))
     if method in ("fedavg", "individual"):
+        if cfg.cohorts:
+            raise ValueError(
+                f"{method} assumes the homogeneous (hidden, mlp_depth) "
+                "model; client-model cohorts only apply to "
+                "distillation-based methods")
         if engine != "host":
             raise ValueError(f"{method} is a baseline with no scanned/sharded "
                              "path; use engine='host'")

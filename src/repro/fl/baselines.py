@@ -16,13 +16,26 @@ from repro.fl.strategies.mean import MeanStrategy
 __all__ = ["FedAvg", "Individual"]
 
 
+def _homogeneous_params(fd: FederatedDistillation):
+    """The single stacked param pytree of a homogeneous run.  The
+    parameter-sharing / no-collaboration baselines average or train one
+    architecture across all clients, so client-model cohorts
+    (``repro.fl.cohorts``) do not apply to them."""
+    if len(fd.client_params) != 1:
+        raise ValueError(
+            "baselines assume the homogeneous (hidden, mlp_depth) model; "
+            "client-model cohorts only apply to distillation-based methods")
+    return fd.client_params[0]
+
+
 class FedAvg:
     def __init__(self, cfg: FLConfig):
         self.cfg = cfg
         fd = FederatedDistillation(cfg, MeanStrategy())
         self.__dict__.update({k: fd.__dict__[k] for k in (
             "xs", "ys", "mask", "xts", "yts", "tmask", "x_test", "y_test",
-            "client_params", "server_params", "n_params")})
+            "server_params", "n_params")})
+        self.client_params = _homogeneous_params(fd)
         self.rng = np.random.default_rng(cfg.seed)
 
     def run(self, rounds: Optional[int] = None) -> History:
@@ -63,7 +76,8 @@ class Individual:
         fd = FederatedDistillation(cfg, MeanStrategy())
         self.__dict__.update({k: fd.__dict__[k] for k in (
             "xs", "ys", "mask", "xts", "yts", "tmask", "x_test", "y_test",
-            "client_params", "server_params")})
+            "server_params")})
+        self.client_params = _homogeneous_params(fd)
 
     def run(self, rounds: Optional[int] = None) -> History:
         c = self.cfg

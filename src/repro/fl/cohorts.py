@@ -1,0 +1,203 @@
+"""Client-model cohorts: heterogeneous architectures across the client axis.
+
+The central promise of distillation-based FL over parameter sharing is
+that clients only exchange *soft-labels*, whose shape ``(m, N)`` is
+independent of the client architecture — so clients are free to run
+different models (FedMD, Sattler et al., Itahara et al.).  This module
+makes that workload first-class:
+
+- :class:`CohortSpec` describes one cohort: how many clients it holds
+  and what architecture they run (MLP hidden width / depth; ``family``
+  is the seam for richer model families — the vision models in
+  ``repro.models`` and the LLM families behind
+  ``repro.models.registry`` plug in here once their data modalities
+  join the FL substrate).
+- :class:`ClientModels` owns the per-cohort *stacked* parameter pytrees
+  plus the cohort -> client index maps.  Different architectures cannot
+  share one stacked pytree (their leaves have different shapes), so the
+  client axis becomes a short static list of cohorts, each of which
+  stays fully vmapped — a 3-cohort, 4000-client run is three jitted
+  programs per primitive, not a Python loop over clients.
+
+Cohort invariant (pinned by ``tests/test_cohorts.py`` and the cohort
+cells of ``tests/test_engine_conformance.py``): everything downstream
+of ``predict_soft`` — strategies, wire codecs, the cache, the comm
+ledger — sees only the concatenated ``(K, m, N)`` soft-label stack in
+global client order and therefore works unchanged for any cohort mix.
+A single-cohort spec is *bit-identical* to the legacy homogeneous path:
+``split``/``concat`` collapse to identity for one cohort, so the traced
+programs are the same.
+
+Client ordering is **cohort-major**: cohort ``c`` owns the contiguous
+global client indices ``[offset_c, offset_c + n_clients_c)``.  The
+client-sharded engine shards each cohort's block independently over the
+mesh "data" axis (every cohort size must divide by the shard count), so
+shard ``s`` holds clients ``offset_c + s*k_c .. offset_c + (s+1)*k_c``
+of every cohort ``c`` — equal per-cohort composition on every shard,
+which is what keeps the ``shard_map`` program uniform (SPMD) across
+shards.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.resnet import init_mlp
+
+__all__ = ["CohortSpec", "ClientModels", "resolve_cohorts"]
+
+# architectures ClientModels can instantiate today; "mlp" with depth=0
+# degenerates to a linear softmax classifier
+_FAMILIES = ("mlp",)
+
+
+@dataclass(frozen=True)
+class CohortSpec:
+    """One cohort: ``n_clients`` clients all running the same model.
+
+    ``hidden``/``depth`` parameterize the MLP family (depth = number of
+    hidden layers; 0 = linear classifier).  Hashable and frozen so a
+    tuple of specs can live in the frozen :class:`repro.fl.FLConfig`.
+    """
+
+    n_clients: int
+    hidden: int
+    depth: int = 2
+    family: str = "mlp"
+
+    def validate(self) -> None:
+        if self.n_clients < 1:
+            raise ValueError(f"cohort needs n_clients >= 1, got {self.n_clients}")
+        if self.hidden < 1:
+            raise ValueError(f"cohort needs hidden >= 1, got {self.hidden}")
+        if self.depth < 0:
+            raise ValueError(f"cohort needs depth >= 0, got {self.depth}")
+        if self.family not in _FAMILIES:
+            raise ValueError(
+                f"unknown cohort model family {self.family!r} "
+                f"(supported: {_FAMILIES})")
+
+
+def resolve_cohorts(cfg) -> Tuple[CohortSpec, ...]:
+    """Cohort tuple for a config: ``cfg.cohorts`` validated against
+    ``cfg.n_clients``, or the implicit single homogeneous cohort built
+    from the legacy ``(hidden, mlp_depth)`` fields."""
+    if not getattr(cfg, "cohorts", None):
+        return (CohortSpec(cfg.n_clients, cfg.hidden, cfg.mlp_depth),)
+    cohorts = tuple(cfg.cohorts)
+    for spec in cohorts:
+        spec.validate()
+    total = sum(s.n_clients for s in cohorts)
+    if total != cfg.n_clients:
+        raise ValueError(
+            f"cohort sizes {[s.n_clients for s in cohorts]} sum to {total}, "
+            f"but cfg.n_clients={cfg.n_clients}")
+    return cohorts
+
+
+class ClientModels:
+    """Per-cohort stacked client parameters + cohort->client index maps.
+
+    The engines hold one :class:`ClientModels` per run and represent
+    ``client_params`` as a list with one stacked pytree per cohort
+    (leading dim = that cohort's client count).  All index maps are
+    static Python ints, so per-cohort loops unroll at trace time and
+    every per-cohort op stays a single vmapped XLA computation.
+    """
+
+    def __init__(self, cohorts: Sequence[CohortSpec], dim: int, n_classes: int):
+        self.cohorts = tuple(cohorts)
+        if not self.cohorts:
+            raise ValueError("need at least one cohort")
+        self.dim = dim
+        self.n_classes = n_classes
+        self.sizes = tuple(s.n_clients for s in self.cohorts)
+        offs = np.concatenate([[0], np.cumsum(self.sizes)])
+        self.offsets = tuple(int(o) for o in offs[:-1])
+        self.n_clients = int(offs[-1])
+        self.slices = tuple(slice(o, o + n)
+                            for o, n in zip(self.offsets, self.sizes))
+
+    # ------------------------------------------------------------------
+    @property
+    def n_cohorts(self) -> int:
+        return len(self.cohorts)
+
+    @property
+    def homogeneous(self) -> bool:
+        return self.n_cohorts == 1
+
+    def cohort_of(self) -> np.ndarray:
+        """(K,) global client index -> cohort id."""
+        return np.repeat(np.arange(self.n_cohorts), self.sizes)
+
+    # ------------------------------------------------------------------
+    def init_params(self, keys: jax.Array) -> List:
+        """Per-cohort stacked params from ``(K, ...)`` stacked PRNG keys
+        (one key per client, in global client order — the same key
+        stream the legacy homogeneous init consumed)."""
+        out = []
+        for spec, sl in zip(self.cohorts, self.slices):
+            out.append(jax.vmap(
+                lambda k, s=spec: self._init_one(s, k))(keys[sl]))
+        return out
+
+    def _init_one(self, spec: CohortSpec, key: jax.Array):
+        # _FAMILIES gate in validate() guarantees family == "mlp" here
+        return init_mlp(key, self.dim, self.n_classes, spec.hidden, spec.depth)
+
+    def param_counts(self) -> Tuple[int, ...]:
+        """Per-cohort parameter count of ONE client model (derived from
+        the real init via ``eval_shape``, so it cannot drift from the
+        model family's actual shapes)."""
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        counts = []
+        for spec in self.cohorts:
+            shapes = jax.eval_shape(lambda k, s=spec: self._init_one(s, k),
+                                    key)
+            counts.append(sum(int(np.prod(x.shape))
+                              for x in jax.tree_util.tree_leaves(shapes)))
+        return tuple(counts)
+
+    # ------------------------------------------------------------------
+    # Cohort-axis plumbing.  For a single cohort both directions are the
+    # identity on the SAME array object — no slice/concat ops enter the
+    # traced program, which is what makes the homogeneous path
+    # bit-identical to the pre-cohort engines.
+    # ------------------------------------------------------------------
+    def split(self, arr) -> List:
+        """Global per-client array ``(K, ...)`` -> per-cohort blocks."""
+        if self.homogeneous:
+            return [arr]
+        return [arr[sl] for sl in self.slices]
+
+    def concat(self, parts: Sequence) -> jnp.ndarray:
+        """Per-cohort blocks -> global ``(K, ...)`` array."""
+        parts = list(parts)
+        if len(parts) == 1:
+            return parts[0]
+        return jnp.concatenate(parts, axis=0)
+
+    def shard_sizes(self, n_shards: int) -> Tuple[int, ...]:
+        """Per-cohort client count on ONE shard; validates divisibility.
+
+        The sharded engine splits every cohort block independently over
+        the mesh "data" axis, so each cohort size must divide by the
+        shard count (equal per-cohort composition on every shard keeps
+        the SPMD program uniform)."""
+        for spec, n in zip(self.cohorts, self.sizes):
+            if n % n_shards:
+                raise ValueError(
+                    f"cohort {spec} has {n} clients, not divisible over "
+                    f"{n_shards} shards (every cohort must split evenly; "
+                    "pick divisible cohort sizes or a narrower mesh)")
+        return tuple(n // n_shards for n in self.sizes)
+
+    def describe(self) -> str:
+        return " + ".join(
+            f"{n}x{s.family}(h={s.hidden},d={s.depth})"
+            for s, n in zip(self.cohorts, self.sizes))

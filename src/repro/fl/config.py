@@ -2,6 +2,9 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.fl.cohorts import CohortSpec
 
 
 @dataclass(frozen=True)
@@ -33,9 +36,17 @@ class FLConfig:
     # 2 for public datasets <= 65k samples; 4 is the legacy conservative
     # default that all pinned ledger values assume)
     index_bytes: float = 4.0
+    # heterogeneous client-model cohorts (repro.fl.cohorts): a tuple of
+    # CohortSpec whose sizes sum to n_clients, assigned to contiguous
+    # cohort-major client blocks.  None = one homogeneous cohort built
+    # from (hidden, mlp_depth) — bit-identical to the pre-cohort path.
+    # Soft-label shapes are architecture-independent, so strategies,
+    # codecs, and the comm ledger are unaffected by the mix.
+    cohorts: Optional[Tuple[CohortSpec, ...]] = None
     # client-sharded engine (engine="shard"): mesh to partition the
     # client axis over — "auto" (the widest local device count that
-    # divides n_clients), "DATA"/"DATAxMODEL" (e.g. "8", "2x4"), or
+    # divides every cohort block; n_clients when homogeneous),
+    # "DATA"/"DATAxMODEL" (e.g. "8", "2x4"), or
     # "production[_multipod]"; see repro.fl.shard_engine.resolve_mesh.
     # Explicit specs require n_clients divisible by the data-axis size.
     mesh_spec: str = "auto"

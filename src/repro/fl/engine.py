@@ -17,6 +17,7 @@ from __future__ import annotations
 
 from repro.fl.api import run_method
 from repro.fl.baselines import FedAvg, Individual
+from repro.fl.cohorts import ClientModels, CohortSpec, resolve_cohorts
 from repro.fl.config import FLConfig
 from repro.fl.rounds import (
     FederatedDistillation,
@@ -62,6 +63,9 @@ from repro.fl.strategies import (
 
 __all__ = [
     "FLConfig",
+    "CohortSpec",
+    "ClientModels",
+    "resolve_cohorts",
     "History",
     "FederatedDistillation",
     "ScannedFederatedDistillation",

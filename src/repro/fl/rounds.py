@@ -1,13 +1,15 @@
 """Generic round loop + jitted client primitives.
 
-The client axis is fully vmapped: client parameters are one stacked
-pytree with leading dimension K, private shards are dense ``(K, n_max)``
-arrays with validity masks, and every per-client primitive below is a
-single jitted program over that axis — a 200-client scenario sweep runs
-without any Python loop over clients.  Scenario heterogeneity
-(per-client local-step counts / learning rates) stays vmapped too, via
-``local_train_masked``: every client scans the same ``max_steps`` and
-masks out its tail steps.
+The client axis is fully vmapped *per cohort*: client parameters are a
+short static list of stacked pytrees (one per model cohort, see
+:mod:`repro.fl.cohorts`; a homogeneous run is a one-element list whose
+ops are bit-identical to a single stack), private shards are dense
+``(K, n_max)`` arrays with validity masks, and every per-client
+primitive below is a single jitted program over each cohort's axis — a
+200-client scenario sweep runs without any Python loop over clients.
+Scenario heterogeneity (per-client local-step counts / learning rates)
+stays vmapped too, via ``local_train_masked``: every client scans the
+same ``max_steps`` and masks out its tail steps.
 
 Workflow per round t (SCARLET Alg. 1, any participation scenario):
   1. server picks the public subset P^t and computes the request list
@@ -38,6 +40,7 @@ from repro.compress import get_codec
 from repro.core import cache as cache_lib
 from repro.core import comm as comm_lib
 from repro.data.synthetic import dirichlet_partition, make_public_private, pad_client_shards
+from repro.fl.cohorts import ClientModels, resolve_cohorts
 from repro.fl.config import FLConfig
 from repro.fl.scenarios import Scenario
 from repro.fl.strategies.base import Strategy
@@ -142,6 +145,11 @@ def _select(new, old, keep_mask):
     return jax.tree_util.tree_map(sel, new, old)
 
 
+def _select_cohorts(new, old, masks):
+    """``_select`` over per-cohort param lists (masks pre-split)."""
+    return [_select(n, o, m) for n, o, m in zip(new, old, masks)]
+
+
 # ---------------------------------------------------------------------------
 # History
 # ---------------------------------------------------------------------------
@@ -155,6 +163,9 @@ class History:
     # Appendix-D proxy metrics (no test labels required in deployment)
     server_val_loss: List[float] = field(default_factory=list)
     client_val_loss: List[float] = field(default_factory=list)
+    # per-cohort mean client accuracy, one row per eval round (a single
+    # column for homogeneous runs) — see repro.fl.cohorts
+    cohort_client_acc: List[List[float]] = field(default_factory=list)
     ledger: comm_lib.CommLedger = field(default_factory=comm_lib.CommLedger)
     final_server_acc: float = 0.0
     final_client_acc: float = 0.0
@@ -167,6 +178,7 @@ class History:
             "cumulative_mb": self.cumulative_mb,
             "server_val_loss": self.server_val_loss,
             "client_val_loss": self.client_val_loss,
+            "cohort_client_acc": self.cohort_client_acc,
             "comm": self.ledger.summary(),
             "final_server_acc": self.final_server_acc,
             "final_client_acc": self.final_client_acc,
@@ -259,10 +271,15 @@ class FederatedDistillation:
         self.x_test = jnp.asarray(data["x_test"])
         self.y_test = jnp.asarray(data["y_test"])
 
+        # Client-model cohorts: client_params is a LIST with one stacked
+        # pytree per cohort (architectures differ, so one stacked tree is
+        # impossible); a homogeneous config yields a one-element list
+        # whose ops are bit-identical to the legacy single-stack path.
+        # Clients keep their global key regardless of the cohort split.
+        self.models = ClientModels(resolve_cohorts(c), c.dim, c.n_classes)
         key = jax.random.PRNGKey(c.seed)
         keys = jax.random.split(key, c.n_clients + 1)
-        self.client_params = jax.vmap(
-            lambda k: init_mlp(k, c.dim, c.n_classes, c.hidden, c.mlp_depth))(keys[:-1])
+        self.client_params = self.models.init_params(keys[:-1])
         self.server_params = init_mlp(keys[-1], c.dim, c.n_classes, c.hidden, c.mlp_depth)
 
         # Appendix-D validation splits: 10% of public for the server proxy,
@@ -275,6 +292,14 @@ class FederatedDistillation:
         pos = jnp.arange(self.mask.shape[1])[None, :]
         self.val_mask = jnp.logical_and(self.mask, pos >= val_cut[:, None])
         self.train_mask = jnp.logical_and(self.mask, pos < val_cut[:, None])
+        # per-cohort views of every per-client array (identity for a
+        # single cohort); the data partition itself is cohort-agnostic
+        m = self.models
+        self.xs_c, self.ys_c = m.split(self.xs), m.split(self.ys)
+        self.train_mask_c = m.split(self.train_mask)
+        self.val_mask_c = m.split(self.val_mask)
+        self.xts_c, self.yts_c = m.split(self.xts), m.split(self.yts)
+        self.tmask_c = m.split(self.tmask)
         self.last_teacher_val: Optional[jnp.ndarray] = None
 
         self.cache_g = cache_lib.init_cache(c.public_size, c.n_classes)
@@ -294,6 +319,8 @@ class FederatedDistillation:
             lr_k, steps_k, max_steps = het.resolve(c.n_clients, c.lr, c.local_steps)
             self._lr_k = jnp.asarray(lr_k, jnp.float32)
             self._steps_k = jnp.asarray(steps_k, jnp.int32)
+            self._lr_k_c = self.models.split(self._lr_k)
+            self._steps_k_c = self.models.split(self._steps_k)
             self._max_steps = max_steps
             self._lr_decay = het.lr_decay
 
@@ -411,17 +438,41 @@ class FederatedDistillation:
         self.last_sync = np.asarray(state["last_sync"]).astype(np.int64)
 
     # ------------------------------------------------------------------
-    def _local_train_all(self, params, t):
-        """``t`` may be a python int (host loop) or traced (scan)."""
+    def _distill_all(self, params, x_prev, pteach):
+        """Per-cohort client distillation on a shared ``(m, N)`` teacher
+        or per-client ``(K, m, N)`` teacher stack (COMET)."""
         c = self.cfg
-        tm = self.train_mask.astype(jnp.float32)
+        if jnp.ndim(pteach) == 3:
+            teach_c = self.models.split(pteach)
+        else:
+            teach_c = [jnp.broadcast_to(pteach, (n,) + pteach.shape)
+                       for n in self.models.sizes]
+        return [distill_v(p, x_prev, teach_c[i], c.lr_dist, c.distill_steps)
+                for i, p in enumerate(params)]
+
+    def _predict_all(self, params, x):
+        """Cohort-collapsing soft predictions: ``(K, |x|, N)`` in global
+        client order — the boundary where architecture heterogeneity
+        becomes invisible to strategies/codecs/cache/ledger."""
+        return self.models.concat([predict_v(p, x) for p in params])
+
+    # ------------------------------------------------------------------
+    def _local_train_all(self, params, t):
+        """Per-cohort local training over the ``params`` list.  ``t``
+        may be a python int (host loop) or traced (scan)."""
+        c = self.cfg
         if self.scenario.heterogeneity is None:
-            return local_train_v(params, self.xs, self.ys, tm, c.lr, c.local_steps)
+            return [local_train_v(p, self.xs_c[i], self.ys_c[i],
+                                  self.train_mask_c[i].astype(jnp.float32),
+                                  c.lr, c.local_steps)
+                    for i, p in enumerate(params)]
         decay = jnp.asarray(self._lr_decay, jnp.float32) ** (
             jnp.asarray(t, jnp.float32) - 1.0)
-        lr_t = self._lr_k * decay
-        return local_train_masked_v(params, self.xs, self.ys, tm,
-                                    lr_t, self._steps_k, self._max_steps)
+        return [local_train_masked_v(p, self.xs_c[i], self.ys_c[i],
+                                     self.train_mask_c[i].astype(jnp.float32),
+                                     self._lr_k_c[i] * decay,
+                                     self._steps_k_c[i], self._max_steps)
+                for i, p in enumerate(params)]
 
     # ------------------------------------------------------------------
     def _draw_round(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -462,16 +513,15 @@ class FederatedDistillation:
         part_j = jnp.asarray(part)
 
         # --- clients: distill on previous teacher, then local training ----
+        part_c = self.models.split(part_j)
         new_params = self.client_params
         if self.prev_teacher is not None:
             pidx, pteach = self.prev_teacher
             x_prev = self.x_pub[jnp.asarray(pidx)]
-            if pteach.ndim != 3:  # shared teacher -> per-client (COMET keeps
-                pteach = jnp.broadcast_to(pteach, (K,) + pteach.shape)  # its own)
-            upd = distill_v(new_params, x_prev, pteach, c.lr_dist, c.distill_steps)
-            new_params = _select(upd, new_params, part_j)
+            upd = self._distill_all(new_params, x_prev, pteach)
+            new_params = _select_cohorts(upd, new_params, part_c)
         upd = self._local_train_all(new_params, t)
-        self.client_params = _select(upd, new_params, part_j)
+        self.client_params = _select_cohorts(upd, new_params, part_c)
 
         # --- request list (cache) ----------------------------------------
         if self.use_cache:
@@ -487,8 +537,12 @@ class FederatedDistillation:
         base, base_present = cache_lib.cached_at(self.cache_g, idx_j)
 
         # --- uplink: soft-labels on requested samples ---------------------
+        # predict_soft collapses the cohort axis: soft-label shapes are
+        # architecture-independent, so everything from here down (wire
+        # codecs, strategy aggregation, cache, ledger) sees one (K, m, N)
+        # stack in global client order regardless of the cohort mix.
         x_round = self.x_pub[idx_j]
-        z_all = predict_v(self.client_params, x_round)  # (K, m, N)
+        z_all = self._predict_all(self.client_params, x_round)  # (K, m, N)
         z_all = s.transmit(z_all, self.rng)
         if not self.codec_up.is_identity:  # lossy wire: what the server sees
             z_all = self.codec_up.roundtrip(z_all, base=base,
@@ -523,7 +577,7 @@ class FederatedDistillation:
                                      c.lr_dist, c.distill_steps)
         # App.-D proxy teacher on the public validation split: the clients'
         # (server-visible) aggregated predictions on held-out public data
-        zv = predict_v(self.client_params, self.x_pub[self.pub_val_idx])
+        zv = self._predict_all(self.client_params, self.x_pub[self.pub_val_idx])
         self.last_teacher_val = jnp.mean(zv, axis=0)
         if per_client is not None:  # COMET: personalized teachers
             if per_client.shape[0] != K:  # partial participation: clients
@@ -591,17 +645,21 @@ class FederatedDistillation:
     def _eval(self, t: int, hist: History) -> None:
         sa = float(accuracy(self.server_params, self.x_test, self.y_test,
                             jnp.ones(len(self.y_test))))
-        ca = float(jnp.mean(accuracy_v(self.client_params, self.xts, self.yts,
-                                       self.tmask.astype(jnp.float32))))
+        accs = [accuracy_v(p, self.xts_c[i], self.yts_c[i],
+                           self.tmask_c[i].astype(jnp.float32))
+                for i, p in enumerate(self.client_params)]
+        ca = float(jnp.mean(self.models.concat(accs)))
         hist.rounds.append(t)
         hist.server_acc.append(sa)
         hist.client_acc.append(ca)
+        hist.cohort_client_acc.append([float(jnp.mean(a)) for a in accs])
         hist.cumulative_mb.append(hist.ledger.cumulative_total / 1e6)
         # Appendix-D proxies (computable in deployment without test labels)
         if self.last_teacher_val is not None:
             hist.server_val_loss.append(float(val_loss_soft(
                 self.server_params, self.x_pub[self.pub_val_idx],
                 self.last_teacher_val)))
-        hist.client_val_loss.append(float(jnp.mean(val_loss_hard_v(
-            self.client_params, self.xs, self.ys,
-            self.val_mask.astype(jnp.float32)))))
+        hist.client_val_loss.append(float(jnp.mean(self.models.concat(
+            [val_loss_hard_v(p, self.xs_c[i], self.ys_c[i],
+                             self.val_mask_c[i].astype(jnp.float32))
+             for i, p in enumerate(self.client_params)]))))

@@ -40,12 +40,10 @@ from repro.core import comm as comm_lib
 from repro.fl.rounds import (
     FederatedDistillation,
     History,
-    _select,
+    _select_cohorts,
     accuracy,
     accuracy_v,
     distill,
-    distill_v,
-    predict_v,
     val_loss_hard_v,
     val_loss_soft,
 )
@@ -85,7 +83,6 @@ class ScannedFederatedDistillation(FederatedDistillation):
     # ------------------------------------------------------------------
     def _round_device(self, carry, xs):
         c, s = self.cfg, self.strategy
-        K = c.n_clients
         t, offline_t, do_eval = xs
 
         kt = jax.random.fold_in(self._key_rounds, t)
@@ -104,13 +101,13 @@ class ScannedFederatedDistillation(FederatedDistillation):
 
         # --- clients: distill on previous teacher, then local training ----
         cp = carry["client_params"]
+        part_c = self.models.split(part)
         x_prev = self.x_pub[carry["prev_idx"]]
-        pteach = jnp.broadcast_to(carry["prev_teacher"],
-                                  (K,) + carry["prev_teacher"].shape)
-        upd = distill_v(cp, x_prev, pteach, c.lr_dist, c.distill_steps)
-        cp = _select(upd, cp, jnp.logical_and(part, carry["have_prev"]))
+        upd = self._distill_all(cp, x_prev, carry["prev_teacher"])
+        cp = _select_cohorts(upd, cp, self.models.split(
+            jnp.logical_and(part, carry["have_prev"])))
         upd = self._local_train_all(cp, t)
-        cp = _select(upd, cp, part)
+        cp = _select_cohorts(upd, cp, part_c)
 
         # --- request list (cache) ----------------------------------------
         cache_prev = carry["cache"]
@@ -129,7 +126,7 @@ class ScannedFederatedDistillation(FederatedDistillation):
 
         # --- uplink + aggregation (fixed shapes, participation-masked) ----
         x_round = self.x_pub[idx]
-        z_all = predict_v(cp, x_round)                     # (K, m, N)
+        z_all = self._predict_all(cp, x_round)             # (K, m, N)
         z_all = s.transmit(z_all, None)
         if not self.codec_up.is_identity:  # lossy wire: what the server sees
             z_all = self.codec_up.roundtrip(z_all, base=base,
@@ -154,7 +151,7 @@ class ScannedFederatedDistillation(FederatedDistillation):
         sp = distill(carry["server_params"], x_round, teacher,
                      c.lr_dist, c.distill_steps)
         server_params = gate(sp, carry["server_params"])
-        zv = predict_v(cp, self.x_pub[self.pub_val_idx])
+        zv = self._predict_all(cp, self.x_pub[self.pub_val_idx])
         teacher_val = jnp.where(any_p, jnp.mean(zv, axis=0),
                                 carry["teacher_val"])
         have_tv = jnp.logical_or(carry["have_tv"], any_p)
@@ -195,16 +192,23 @@ class ScannedFederatedDistillation(FederatedDistillation):
         def _eval():
             sa = accuracy(server_params, self.x_test, self.y_test,
                           jnp.ones(len(self.y_test)))
-            ca = jnp.mean(accuracy_v(cp, self.xts, self.yts,
-                                     self.tmask.astype(jnp.float32)))
+            accs = [accuracy_v(p, self.xts_c[i], self.yts_c[i],
+                               self.tmask_c[i].astype(jnp.float32))
+                    for i, p in enumerate(cp)]
+            ca = jnp.mean(self.models.concat(accs))
+            cacc = jnp.stack([jnp.mean(a) for a in accs])
             sv = val_loss_soft(server_params, self.x_pub[self.pub_val_idx],
                                teacher_val)
-            cv = jnp.mean(val_loss_hard_v(cp, self.xs, self.ys,
-                                          self.val_mask.astype(jnp.float32)))
-            return sa, ca, sv, cv
+            cv = jnp.mean(self.models.concat(
+                [val_loss_hard_v(p, self.xs_c[i], self.ys_c[i],
+                                 self.val_mask_c[i].astype(jnp.float32))
+                 for i, p in enumerate(cp)]))
+            return sa, ca, sv, cv, cacc
 
-        sa, ca, sv, cv = jax.lax.cond(
-            do_eval, _eval, lambda: (jnp.float32(0),) * 4)
+        sa, ca, sv, cv, cacc = jax.lax.cond(
+            do_eval, _eval,
+            lambda: (jnp.float32(0),) * 4
+            + (jnp.zeros(self.models.n_cohorts, jnp.float32),))
 
         new_carry = dict(
             client_params=cp,
@@ -219,7 +223,7 @@ class ScannedFederatedDistillation(FederatedDistillation):
         )
         ys = dict(uplink=uplink, downlink=downlink,
                   server_acc=sa, client_acc=ca, server_val=sv, client_val=cv,
-                  have_tv=have_tv)
+                  cohort_acc=cacc, have_tv=have_tv)
         return new_carry, ys
 
     # ------------------------------------------------------------------
@@ -273,6 +277,7 @@ class ScannedFederatedDistillation(FederatedDistillation):
         ca = np.asarray(ys["client_acc"])
         sv = np.asarray(ys["server_val"])
         cv = np.asarray(ys["client_val"])
+        cacc = np.asarray(ys["cohort_acc"])               # (T, n_cohorts)
         have_tv = np.asarray(ys["have_tv"])
 
         hist = History()
@@ -282,6 +287,7 @@ class ScannedFederatedDistillation(FederatedDistillation):
             hist.rounds.append(t0 + int(i) + 1)
             hist.server_acc.append(float(sa[i]))
             hist.client_acc.append(float(ca[i]))
+            hist.cohort_client_acc.append([float(x) for x in cacc[i]])
             hist.cumulative_mb.append(float(cum[i]) / 1e6)
             if have_tv[i]:
                 hist.server_val_loss.append(float(sv[i]))

@@ -19,10 +19,18 @@ moments plus a handful of scalar reductions:
   replicated reduction;
 - byte accounting threads shard-local counts through the shard-aware
   cost functions (``comm.distillation_round_cost_device(axis_name=...)``
-  psums the per-shard participant count,
-  ``cache.catch_up_bytes_device(axis_name=...)`` the per-shard catch-up
-  bytes);
-- eval metrics psum per-shard partial sums.
+  psums the per-shard participant count; catch-up bytes are computed
+  from the replicated ``last_sync``/participation state — the identical
+  expression the scanned engine evaluates);
+- eval metrics psum per-shard (per-cohort) partial sums.
+
+Client-model cohorts (:mod:`repro.fl.cohorts`) shard naturally: every
+cohort's contiguous client block is partitioned independently over the
+same "data" axis (cohort sizes must divide the shard count), so each
+shard holds an equal per-cohort composition and the SPMD program stays
+uniform.  Soft-labels collapse the cohort axis before aggregation, so
+the two-phase Strategy contract and the psum'd cost functions are
+untouched by the mix.
 
 Everything server-side (cache state, teacher assembly, server
 distillation, the public dataset) is replicated — redundantly computed
@@ -41,6 +49,7 @@ whole strategy x participation x codec matrix by
 """
 from __future__ import annotations
 
+import math
 import re
 from typing import Optional, Union
 
@@ -56,14 +65,13 @@ except ImportError:  # pragma: no cover - version-dependent import path
 from repro.core import cache as cache_lib
 from repro.core import comm as comm_lib
 from repro.fl.rounds import (
-    _select,
+    _select_cohorts,
     accuracy,
     accuracy_v,
     distill,
     distill_v,
     local_train_masked_v,
     local_train_v,
-    predict_v,
     val_loss_hard_v,
     val_loss_soft,
 )
@@ -135,9 +143,11 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
         super().__init__(*args, **kwargs)
         spec = mesh if mesh is not None else self.cfg.mesh_spec
         if spec is None or spec in ("", "auto"):
-            # widest divisible client partition over the local devices —
-            # "auto" must never reject a client count
-            spec = f"{best_data_axis(self.cfg.n_clients)}"
+            # widest client partition over the local devices that splits
+            # every cohort block evenly (gcd of the cohort sizes; the
+            # whole K for a homogeneous run) — "auto" must never reject
+            # a client count or a cohort mix
+            spec = f"{best_data_axis(math.gcd(*self.models.sizes))}"
         self.mesh = resolve_mesh(spec)
         if CLIENT_AXIS not in self.mesh.axis_names:
             raise ValueError(
@@ -149,30 +159,43 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
                 f"n_clients={self.cfg.n_clients} does not divide evenly over "
                 f"the {self.n_shards}-way {CLIENT_AXIS!r} axis "
                 "(pick a divisible client count or a narrower mesh)")
+        # every cohort's block is sharded independently, so each cohort
+        # size must split evenly too (equal per-cohort composition on
+        # every shard keeps the SPMD program uniform)
+        self.kloc_c = self.models.shard_sizes(self.n_shards)
         self._shard_fn = None
 
     # ------------------------------------------------------------------
     def _consts(self) -> dict:
         """Arrays the round body reads besides the carry: client-sharded
-        private/eval shards and replicated public/test data."""
+        private/eval shards (per-cohort tuples — each cohort's block is
+        partitioned independently over the client axis) and replicated
+        public/test data."""
         consts = dict(
-            xs=self.xs, ys=self.ys, train_mask=self.train_mask,
-            xts=self.xts, yts=self.yts, tmask=self.tmask,
-            val_mask=self.val_mask,
+            xs=tuple(self.xs_c), ys=tuple(self.ys_c),
+            train_mask=tuple(self.train_mask_c),
+            xts=tuple(self.xts_c), yts=tuple(self.yts_c),
+            tmask=tuple(self.tmask_c), val_mask=tuple(self.val_mask_c),
             x_pub=self.x_pub, x_test=self.x_test, y_test=self.y_test,
             x_pub_val=self.x_pub[self.pub_val_idx],
         )
         if self.scenario.heterogeneity is not None:
-            consts.update(lr_k=self._lr_k, steps_k=self._steps_k)
+            consts.update(lr_k=tuple(self._lr_k_c),
+                          steps_k=tuple(self._steps_k_c))
         return consts
 
     def _specs(self):
         """(carry, xs, consts) PartitionSpec pytrees (prefix form)."""
         cax, rep = P(CLIENT_AXIS), P()
+        # last_sync stays REPLICATED: its update depends only on the
+        # (replicated) global participation draw, so keeping it global
+        # avoids axis_index-tainted dataflow in an int carry — which the
+        # SPMD partitioner (check_rep=False) cannot prove replicated
+        # over non-client mesh axes and would mis-reduce on the gather.
         carry = dict(
             client_params=cax, server_params=rep, cache=rep,
             prev_teacher=rep, prev_idx=rep, have_prev=rep,
-            teacher_val=rep, have_tv=rep, last_sync=cax)
+            teacher_val=rep, have_tv=rep, last_sync=rep)
         consts = dict(
             xs=cax, ys=cax, train_mask=cax, xts=cax, yts=cax, tmask=cax,
             val_mask=cax, x_pub=rep, x_test=rep, y_test=rep, x_pub_val=rep)
@@ -185,15 +208,18 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
     # ------------------------------------------------------------------
     def _local_train_shard(self, params, t, consts):
         c = self.cfg
-        tm = consts["train_mask"].astype(jnp.float32)
         if self.scenario.heterogeneity is None:
-            return local_train_v(params, consts["xs"], consts["ys"], tm,
-                                 c.lr, c.local_steps)
+            return [local_train_v(p, consts["xs"][i], consts["ys"][i],
+                                  consts["train_mask"][i].astype(jnp.float32),
+                                  c.lr, c.local_steps)
+                    for i, p in enumerate(params)]
         decay = jnp.asarray(self._lr_decay, jnp.float32) ** (
             jnp.asarray(t, jnp.float32) - 1.0)
-        return local_train_masked_v(params, consts["xs"], consts["ys"], tm,
-                                    consts["lr_k"] * decay, consts["steps_k"],
-                                    self._max_steps)
+        return [local_train_masked_v(p, consts["xs"][i], consts["ys"][i],
+                                     consts["train_mask"][i].astype(jnp.float32),
+                                     consts["lr_k"][i] * decay,
+                                     consts["steps_k"][i], self._max_steps)
+                for i, p in enumerate(params)]
 
     # ------------------------------------------------------------------
     def _round_device_sharded(self, carry, xs, consts):
@@ -202,7 +228,6 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
         via ``psum`` over the client mesh axis."""
         c, s = self.cfg, self.strategy
         K = c.n_clients
-        kloc = K // self.n_shards
         t, offline_t, do_eval = xs
 
         kt = jax.random.fold_in(self._key_rounds, t)
@@ -212,10 +237,14 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
         # Participation is drawn over the FULL client axis on every shard
         # (replicated: same key -> same draw) — conscription ranks couple
         # clients across shards and key-stream parity with engine="scan"
-        # requires the identical global sample — then sliced locally.
+        # requires the identical global sample — then sliced locally, one
+        # block per cohort (cohort c's shard-s clients are the global
+        # indices offset_c + s*kloc_c .. offset_c + (s+1)*kloc_c).
         part_full = self.scenario.participation_mask_device(k_part, offline_t)
-        lo = jax.lax.axis_index(CLIENT_AXIS) * kloc
-        part = jax.lax.dynamic_slice_in_dim(part_full, lo, kloc)
+        six = jax.lax.axis_index(CLIENT_AXIS)
+        part_c = [jax.lax.dynamic_slice_in_dim(part_full, off + six * kc, kc)
+                  for off, kc in zip(self.models.offsets, self.kloc_c)]
+        part = self.models.concat(part_c)          # shard-local (kloc,)
         part_f = part.astype(jnp.float32)
         n_part = jnp.sum(part_full.astype(jnp.float32))  # global, replicated
         any_p = n_part > 0
@@ -225,15 +254,18 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
             return jax.tree_util.tree_map(
                 lambda a, b: jnp.where(any_p, a, b), new, old)
 
-        # --- clients (shard-local): distill on prev teacher, train -------
+        # --- clients (shard-local, per cohort): distill, then train ------
         cp = carry["client_params"]
         x_prev = consts["x_pub"][carry["prev_idx"]]
-        pteach = jnp.broadcast_to(carry["prev_teacher"],
-                                  (kloc,) + carry["prev_teacher"].shape)
-        upd = distill_v(cp, x_prev, pteach, c.lr_dist, c.distill_steps)
-        cp = _select(upd, cp, jnp.logical_and(part, carry["have_prev"]))
+        upd = [distill_v(p, x_prev,
+                         jnp.broadcast_to(carry["prev_teacher"],
+                                          (kc,) + carry["prev_teacher"].shape),
+                         c.lr_dist, c.distill_steps)
+               for p, kc in zip(cp, self.kloc_c)]
+        cp = _select_cohorts(upd, cp, [jnp.logical_and(pc, carry["have_prev"])
+                                       for pc in part_c])
         upd = self._local_train_shard(cp, t, consts)
-        cp = _select(upd, cp, part)
+        cp = _select_cohorts(upd, cp, part_c)
 
         # --- request list (replicated cache) -----------------------------
         cache_prev = carry["cache"]
@@ -250,8 +282,11 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
         base, base_present = cache_lib.cached_at(cache_prev, idx)
 
         # --- uplink + two-phase aggregation ------------------------------
+        # the cohort axis collapses here: soft-label shapes are
+        # architecture-independent, so codec/strategy/ledger code below
+        # is identical to the homogeneous path
         x_round = consts["x_pub"][idx]
-        z_all = predict_v(cp, x_round)                 # (kloc, m, N)
+        z_all = self._predict_all(cp, x_round)         # (kloc, m, N)
         z_all = s.transmit(z_all, None)
         if not self.codec_up.is_identity:
             z_all = self.codec_up.roundtrip(z_all, base=base,
@@ -277,7 +312,7 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
                      c.lr_dist, c.distill_steps)
         server_params = gate(sp, carry["server_params"])
 
-        zv = predict_v(cp, consts["x_pub_val"])        # (kloc, n_val, N)
+        zv = self._predict_all(cp, consts["x_pub_val"])  # (kloc, n_val, N)
         zv_sum = jax.lax.psum(jnp.sum(zv, axis=0), CLIENT_AXIS)
         teacher_val = jnp.where(any_p, zv_sum / K, carry["teacher_val"])
         have_tv = jnp.logical_or(carry["have_tv"], any_p)
@@ -286,12 +321,15 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
         prev_idx = jnp.where(any_p, idx, carry["prev_idx"])
         have_prev = jnp.logical_or(carry["have_prev"], any_p)
 
-        # --- shard-aware byte accounting ---------------------------------
+        # --- byte accounting ---------------------------------------------
+        # last_sync and the participation draw are both replicated, so
+        # catch-up bytes are computed globally on every shard — the
+        # *identical* expression the scanned engine evaluates, hence
+        # byte-equal ledgers by construction (no psum needed)
         catch_up = 0.0
-        if self.use_cache:  # per-shard stragglers -> psum'd global bytes
+        if self.use_cache:
             catch_up = cache_lib.catch_up_bytes_device(
-                cache_prev, carry["last_sync"], part, t,
-                axis_name=CLIENT_AXIS)
+                cache_prev, carry["last_sync"], part_full, t)
         n_up = n_req
         if um is not None:  # Selective-FD: psum the uploaded-entry count
             uploaded_total = jax.lax.psum(jnp.sum(
@@ -315,24 +353,33 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
         )
         uplink = jnp.where(any_p, uplink, 0.0)
         downlink = jnp.where(any_p, downlink, 0.0)
-        last_sync = jnp.where(part, t, carry["last_sync"])
+        last_sync = jnp.where(part_full, t, carry["last_sync"])
 
-        # --- eval: shard-local partial sums under the cond, psum outside
-        # (collectives stay unconditional; do_eval is replicated) ---------
+        # --- eval: shard-local per-cohort partial sums under the cond,
+        # psum outside (collectives stay unconditional; do_eval is
+        # replicated) -----------------------------------------------------
         def _eval_local():
             sa = accuracy(server_params, consts["x_test"], consts["y_test"],
                           jnp.ones(consts["y_test"].shape[0]))
-            ca_part = jnp.sum(accuracy_v(cp, consts["xts"], consts["yts"],
-                                         consts["tmask"].astype(jnp.float32)))
+            acc_sums = jnp.stack([jnp.sum(accuracy_v(
+                p, consts["xts"][i], consts["yts"][i],
+                consts["tmask"][i].astype(jnp.float32)))
+                for i, p in enumerate(cp)])            # (n_cohorts,)
             sv = val_loss_soft(server_params, consts["x_pub_val"], teacher_val)
-            cv_part = jnp.sum(val_loss_hard_v(
-                cp, consts["xs"], consts["ys"],
-                consts["val_mask"].astype(jnp.float32)))
-            return sa, ca_part, sv, cv_part
+            cv_part = sum(jnp.sum(val_loss_hard_v(
+                p, consts["xs"][i], consts["ys"][i],
+                consts["val_mask"][i].astype(jnp.float32)))
+                for i, p in enumerate(cp))
+            return sa, acc_sums, sv, cv_part
 
-        sa, ca_part, sv, cv_part = jax.lax.cond(
-            do_eval, _eval_local, lambda: (jnp.float32(0),) * 4)
-        ca = jax.lax.psum(ca_part, CLIENT_AXIS) / K
+        sa, acc_sums, sv, cv_part = jax.lax.cond(
+            do_eval, _eval_local,
+            lambda: (jnp.float32(0),
+                     jnp.zeros(self.models.n_cohorts, jnp.float32),
+                     jnp.float32(0), jnp.float32(0)))
+        acc_sums = jax.lax.psum(acc_sums, CLIENT_AXIS)  # global per cohort
+        cacc = acc_sums / jnp.asarray(self.models.sizes, jnp.float32)
+        ca = jnp.sum(acc_sums) / K
         cv = jax.lax.psum(cv_part, CLIENT_AXIS) / K
 
         new_carry = dict(
@@ -348,7 +395,7 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
         )
         ys = dict(uplink=uplink, downlink=downlink,
                   server_acc=sa, client_acc=ca, server_val=sv, client_val=cv,
-                  have_tv=have_tv)
+                  cohort_acc=cacc, have_tv=have_tv)
         return new_carry, ys
 
     # ------------------------------------------------------------------

@@ -49,6 +49,14 @@ try:
 except ImportError:
     HAVE_HYPOTHESIS = False
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="regenerate tests/golden/*.json ledger fixtures in place "
+             "(tests/test_golden_ledgers.py) instead of asserting "
+             "byte-equality; commit the resulting diff")
+
+
 if not HAVE_HYPOTHESIS and os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
     raise RuntimeError(
         "REPRO_REQUIRE_HYPOTHESIS is set but hypothesis is not importable — "

@@ -1,0 +1,234 @@
+"""Client-model cohort subsystem (``repro.fl.cohorts``).
+
+Two layers:
+
+- deterministic unit tests of :class:`CohortSpec` validation,
+  :class:`ClientModels` index maps / split-concat plumbing, and the
+  heterogeneous data path (per-cohort param shapes, per-cohort History
+  metrics, api shorthand, baseline rejection);
+- a hypothesis property pinning the **legacy-equivalence invariant**:
+  for random widths/depths/seeds, a run configured with an explicit
+  single-cohort ``CohortSpec`` is *bit-identical* — ledger bytes, final
+  cache state, sync bookkeeping, and every History metric — to the same
+  config expressed through the legacy homogeneous ``(hidden,
+  mlp_depth)`` fields, on all three engines.  ``ClientModels.split`` /
+  ``concat`` are the identity for one cohort, so the traced programs
+  must be the same; any slice/concat sneaking into the homogeneous path
+  breaks this test before it breaks the golden fixtures.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.fl import (
+    ClientModels,
+    CohortSpec,
+    FederatedDistillation,
+    FLConfig,
+    ScannedFederatedDistillation,
+    Scenario,
+    ShardedFederatedDistillation,
+    bernoulli_participation,
+    resolve_cohorts,
+    run_method,
+)
+from repro.fl.strategies import STRATEGIES
+
+CFG = FLConfig(n_clients=4, n_classes=4, dim=8, rounds=3, local_steps=2,
+               distill_steps=2, public_size=48, public_per_round=10,
+               private_size=64, alpha=0.5, eval_every=2, seed=0, hidden=12,
+               mesh_spec="2x4")
+
+
+# ---------------------------------------------------------------------------
+# CohortSpec / resolve_cohorts validation
+# ---------------------------------------------------------------------------
+
+def test_resolve_default_is_single_legacy_cohort():
+    assert resolve_cohorts(CFG) == (CohortSpec(4, 12, 2),)
+
+
+def test_resolve_rejects_size_mismatch():
+    cfg = dataclasses.replace(
+        CFG, cohorts=(CohortSpec(3, 12, 2), CohortSpec(3, 8, 1)))
+    with pytest.raises(ValueError, match="sum to 6"):
+        resolve_cohorts(cfg)
+
+
+@pytest.mark.parametrize("bad", [
+    CohortSpec(0, 12, 2),
+    CohortSpec(4, 0, 2),
+    CohortSpec(4, 12, -1),
+    CohortSpec(4, 12, 2, family="resnet50"),
+])
+def test_spec_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        bad.validate()
+
+
+def test_index_maps():
+    m = ClientModels((CohortSpec(3, 16, 2), CohortSpec(2, 8, 1),
+                      CohortSpec(4, 24, 3)), dim=8, n_classes=4)
+    assert m.n_clients == 9
+    assert m.offsets == (0, 3, 5)
+    assert m.slices == (slice(0, 3), slice(3, 5), slice(5, 9))
+    np.testing.assert_array_equal(m.cohort_of(),
+                                  [0, 0, 0, 1, 1, 2, 2, 2, 2])
+    arr = jnp.arange(9)
+    parts = m.split(arr)
+    assert [p.tolist() for p in parts] == [[0, 1, 2], [3, 4], [5, 6, 7, 8]]
+    np.testing.assert_array_equal(m.concat(parts), arr)
+    assert m.shard_sizes(1) == (3, 2, 4)
+    with pytest.raises(ValueError, match="not divisible over"):
+        m.shard_sizes(2)
+
+
+def test_split_concat_are_identity_for_single_cohort():
+    """The homogeneous path must not grow slice/concat ops — identity on
+    the SAME array object keeps the traced program bit-identical to the
+    pre-cohort engines."""
+    m = ClientModels((CohortSpec(4, 12, 2),), dim=8, n_classes=4)
+    arr = jnp.arange(4.0)
+    assert m.split(arr)[0] is arr
+    assert m.concat([arr]) is arr
+
+
+def test_init_params_shapes_and_key_stream():
+    """Per-cohort stacked params: right widths per cohort, and each
+    client consumes the same global key it would in a homogeneous run."""
+    m = ClientModels((CohortSpec(2, 16, 2), CohortSpec(2, 12, 2)),
+                     dim=8, n_classes=4)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    params = m.init_params(keys)
+    assert params[0]["w1"].shape == (2, 16, 16)
+    assert params[1]["w1"].shape == (2, 12, 12)
+    # cohort 1's client 0 is global client 2: same key -> same leading
+    # row as a width-12 cohort starting at that key
+    m2 = ClientModels((CohortSpec(2, 12, 2),), dim=8, n_classes=4)
+    ref = m2.init_params(keys[2:])
+    np.testing.assert_array_equal(params[1]["w0"], ref[0]["w0"])
+
+
+def test_param_counts():
+    m = ClientModels((CohortSpec(1, 16, 2), CohortSpec(1, 8, 0)),
+                     dim=8, n_classes=4)
+    # 8*16+16 + 16*16+16 + 16*4+4 = 484 ; depth 0 -> linear: 8*4+4 = 36
+    assert m.param_counts() == (484, 36)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous runs: data path + api plumbing
+# ---------------------------------------------------------------------------
+
+def test_heterogeneous_run_per_cohort_metrics():
+    cohorts = (CohortSpec(2, 16, 2), CohortSpec(2, 8, 1))
+    h = run_method("scarlet", CFG, cache_duration=3, beta=1.5,
+                   engine="scan", cohorts=cohorts)
+    assert all(len(row) == 2 for row in h.cohort_client_acc)
+    assert len(h.cohort_client_acc) == len(h.rounds)
+    # the weighted cohort means recompose the global client accuracy
+    for row, ca in zip(h.cohort_client_acc, h.client_acc):
+        assert abs(np.average(row, weights=[2, 2]) - ca) < 1e-5
+
+
+def test_engine_params_are_per_cohort():
+    cohorts = (CohortSpec(2, 16, 2), CohortSpec(2, 8, 1))
+    cfg = dataclasses.replace(CFG, cohorts=cohorts)
+    eng = FederatedDistillation(cfg, STRATEGIES["scarlet"](beta=1.5),
+                                cache_duration=3)
+    assert len(eng.client_params) == 2
+    assert eng.client_params[0]["w1"].shape == (2, 16, 16)
+    assert eng.client_params[1]["w0"].shape == (2, 8, 8)
+    assert eng.models.describe() == "2xmlp(h=16,d=2) + 2xmlp(h=8,d=1)"
+
+
+def test_shard_auto_mesh_respects_cohort_blocks():
+    """``mesh_spec="auto"`` must never reject a cohort mix: it sizes the
+    data axis from the gcd of the cohort sizes (2 here, even with 8
+    local devices and K=4 divisible by 4)."""
+    cfg = dataclasses.replace(
+        CFG, mesh_spec="auto",
+        cohorts=(CohortSpec(2, 24, 3), CohortSpec(2, 8, 1)))
+    eng = ShardedFederatedDistillation(
+        cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=3)
+    assert eng.n_shards == 2
+    eng.run(1)
+
+
+def test_baselines_reject_cohorts():
+    cohorts = (CohortSpec(2, 16, 2), CohortSpec(2, 8, 1))
+    for method in ("fedavg", "individual"):
+        with pytest.raises(ValueError, match="homogeneous"):
+            run_method(method, CFG, cohorts=cohorts)
+
+
+# ---------------------------------------------------------------------------
+# Legacy-equivalence property: single cohort == pre-cohort path, bitwise
+# ---------------------------------------------------------------------------
+
+def _run_pair(cfg_legacy, engine):
+    """(legacy-config run, explicit-single-cohort run) on one engine."""
+    cohort_cfg = dataclasses.replace(
+        cfg_legacy,
+        cohorts=(CohortSpec(cfg_legacy.n_clients, cfg_legacy.hidden,
+                            cfg_legacy.mlp_depth),))
+    out = []
+    for cfg in (cfg_legacy, cohort_cfg):
+        kw = dict(cache_duration=3,
+                  scenario=Scenario(participation=bernoulli_participation(0.5)))
+        if engine is FederatedDistillation:
+            kw["rng_backend"] = "jax"
+        eng = engine(cfg, STRATEGIES["scarlet"](beta=1.5), **kw)
+        out.append((eng, eng.run()))
+    return out
+
+
+def _assert_bit_identical(a, b):
+    (eng_a, hist_a), (eng_b, hist_b) = a, b
+    np.testing.assert_array_equal([r.uplink for r in hist_a.ledger.rounds],
+                                  [r.uplink for r in hist_b.ledger.rounds])
+    np.testing.assert_array_equal([r.downlink for r in hist_a.ledger.rounds],
+                                  [r.downlink for r in hist_b.ledger.rounds])
+    assert hist_a.rounds == hist_b.rounds
+    assert hist_a.server_acc == hist_b.server_acc
+    assert hist_a.client_acc == hist_b.client_acc
+    assert hist_a.cohort_client_acc == hist_b.cohort_client_acc
+    assert hist_a.server_val_loss == hist_b.server_val_loss
+    assert hist_a.client_val_loss == hist_b.client_val_loss
+    for f in ("present", "ts", "values"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(eng_a.cache_g, f)),
+            np.asarray(getattr(eng_b.cache_g, f)))
+    np.testing.assert_array_equal(eng_a.last_sync, eng_b.last_sync)
+    for x, y in zip(jax.tree_util.tree_leaves(eng_a.client_params),
+                    jax.tree_util.tree_leaves(eng_b.client_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=4, deadline=None)
+@given(hidden=st.integers(4, 24), depth=st.integers(0, 3),
+       seed=st.integers(0, 2 ** 16))
+def test_single_cohort_bit_identical_host(hidden, depth, seed):
+    cfg = dataclasses.replace(CFG, hidden=hidden, mlp_depth=depth, seed=seed)
+    _assert_bit_identical(*_run_pair(cfg, FederatedDistillation))
+
+
+@settings(max_examples=4, deadline=None)
+@given(hidden=st.integers(4, 24), depth=st.integers(0, 3),
+       seed=st.integers(0, 2 ** 16))
+def test_single_cohort_bit_identical_scan(hidden, depth, seed):
+    cfg = dataclasses.replace(CFG, hidden=hidden, mlp_depth=depth, seed=seed)
+    _assert_bit_identical(*_run_pair(cfg, ScannedFederatedDistillation))
+
+
+@settings(max_examples=4, deadline=None)
+@given(hidden=st.integers(4, 24), depth=st.integers(0, 3),
+       seed=st.integers(0, 2 ** 16))
+def test_single_cohort_bit_identical_shard(hidden, depth, seed):
+    cfg = dataclasses.replace(CFG, hidden=hidden, mlp_depth=depth, seed=seed)
+    _assert_bit_identical(*_run_pair(cfg, ShardedFederatedDistillation))

@@ -18,6 +18,11 @@ The shard runs use ``make_test_mesh``-shaped meshes on the 8 forced
 host devices (see ``conftest.py``), so the ``shard_map`` paths —
 two-phase aggregation psum, shard-aware byte accounting, conscription
 slicing — execute for real in every environment.
+
+A second, cohort matrix re-asserts both contracts for heterogeneous
+client-model cohorts (``repro.fl.cohorts``): different architectures
+per client block, identical ledger/cache/metric guarantees, plus
+per-cohort accuracy columns allclose across engines.
 """
 import dataclasses
 
@@ -25,6 +30,7 @@ import numpy as np
 import pytest
 
 from repro.fl import (
+    CohortSpec,
     FederatedDistillation,
     FLConfig,
     Outage,
@@ -72,10 +78,17 @@ MATRIX = [(s, p, c) for s in sorted(STRATEGY_KW)
 # Parity assertion, shared with tests/test_scan_parity.py
 # ---------------------------------------------------------------------------
 
-def assert_parity(eng_a, hist_a, eng_b, hist_b, *, ledger="close"):
+def assert_parity(eng_a, hist_a, eng_b, hist_b, *, ledger="close",
+                  cache_atol=1e-5):
     """Engine/History pair parity.  ``ledger="exact"`` demands bitwise
     byte-identity (device engine vs device engine); ``"close"`` allows
-    float32-level rounding (host float64 vs device float32)."""
+    float32-level rounding (host float64 vs device float32).
+
+    ``cache_atol`` bounds the cached teacher values.  Cells with a
+    *lossy* wire codec pass one quantization step here: a sub-ulp
+    cross-engine difference in the pre-codec soft-labels can flip a
+    quantization bucket, which the decode amplifies to a full step
+    (~range/255 for quant8) — inherent to lossy codecs, not drift."""
     up_a = [r.uplink for r in hist_a.ledger.rounds]
     up_b = [r.uplink for r in hist_b.ledger.rounds]
     down_a = [r.downlink for r in hist_a.ledger.rounds]
@@ -97,13 +110,18 @@ def assert_parity(eng_a, hist_a, eng_b, hist_b, *, ledger="close"):
                                rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(hist_a.client_val_loss, hist_b.client_val_loss,
                                rtol=1e-4, atol=1e-5)
+    # per-cohort client accuracy (one column per model cohort; a single
+    # column for homogeneous runs)
+    np.testing.assert_allclose(hist_a.cohort_client_acc,
+                               hist_b.cohort_client_acc, atol=1e-4)
     # --- cache state + sync bookkeeping -------------------------------
     np.testing.assert_array_equal(np.asarray(eng_a.cache_g.present),
                                   np.asarray(eng_b.cache_g.present))
     np.testing.assert_array_equal(np.asarray(eng_a.cache_g.ts),
                                   np.asarray(eng_b.cache_g.ts))
     np.testing.assert_allclose(np.asarray(eng_a.cache_g.values),
-                               np.asarray(eng_b.cache_g.values), atol=1e-5)
+                               np.asarray(eng_b.cache_g.values),
+                               rtol=0, atol=cache_atol)
     np.testing.assert_array_equal(eng_a.last_sync, eng_b.last_sync)
 
 
@@ -127,6 +145,60 @@ def test_engine_conformance_cell(name, participation, codec):
     shard = _build(ShardedFederatedDistillation, name, participation, codec)
     assert_parity(*host, *scan, ledger="close")
     assert_parity(*scan, *shard, ledger="exact")
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous client-model cohorts (repro.fl.cohorts): host x scan x
+# shard over {scarlet, dsfl} x {2-cohort, 3-cohort} x {identity,
+# cache_delta+quant8}.  Soft-label shapes are architecture-independent,
+# so the exact engine contracts must hold unchanged: scan<->shard
+# ledgers byte-identical, host<->scan allclose at float32 exactness,
+# per-cohort metrics allclose everywhere.  K=8 so every cohort block
+# splits evenly over the 2-way "data" axis of the 2x4 mesh.
+# ---------------------------------------------------------------------------
+
+COHORTS = {
+    "2cohort": (CohortSpec(4, 16, 2), CohortSpec(4, 8, 1)),
+    "3cohort": (CohortSpec(4, 16, 2), CohortSpec(2, 8, 1),
+                CohortSpec(2, 24, 3)),
+}
+COHORT_CODECS = ("identity", "cache_delta+quant8")
+COHORT_MATRIX = [(s, co, c) for s in ("dsfl", "scarlet")
+                 for co in sorted(COHORTS) for c in COHORT_CODECS]
+
+
+@pytest.mark.parametrize("name,cohort,codec", COHORT_MATRIX,
+                         ids=["-".join(p) for p in COHORT_MATRIX])
+def test_cohort_conformance_cell(name, cohort, codec):
+    cfg = dataclasses.replace(CFG, n_clients=8, cohorts=COHORTS[cohort],
+                              uplink_codec=codec)
+    sc = PARTICIPATIONS["bernoulli"]
+
+    def build(engine_cls, **kw):
+        eng = engine_cls(cfg, STRATEGIES[name](**STRATEGY_KW[name]),
+                         cache_duration=CACHE_D[name], scenario=sc, **kw)
+        return eng, eng.run()
+
+    host = build(FederatedDistillation, rng_backend="jax")
+    scan = build(ScannedFederatedDistillation)
+    shard = build(ShardedFederatedDistillation)
+    assert len(host[1].cohort_client_acc[0]) == len(COHORTS[cohort])
+    # lossy cells tolerate one quant8 step on the widest possible row
+    # (range ~1 -> 1/255 ~ 3.9e-3); identity cells stay tight
+    cache_atol = 1e-5 if codec == "identity" else 5e-3
+    assert_parity(*host, *scan, ledger="close", cache_atol=cache_atol)
+    assert_parity(*scan, *shard, ledger="exact", cache_atol=cache_atol)
+
+
+def test_shard_engine_rejects_indivisible_cohorts():
+    """Every cohort block must split evenly over the client axis — a
+    5+3 split cannot shard 2-ways even though K=8 can."""
+    cfg = dataclasses.replace(
+        CFG, n_clients=8, cohorts=(CohortSpec(5, 16, 2), CohortSpec(3, 8, 1)))
+    with pytest.raises(ValueError, match="not divisible over"):
+        ShardedFederatedDistillation(
+            cfg, STRATEGIES["scarlet"](**STRATEGY_KW["scarlet"]),
+            cache_duration=3)
 
 
 # ---------------------------------------------------------------------------
