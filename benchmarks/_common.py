@@ -1,10 +1,16 @@
-"""Shared benchmark substrate: default FL config + timing helpers."""
+"""Shared benchmark substrate: default FL config + timing helpers +
+the ``BENCH_*.json`` writer the perf-regression gate consumes."""
 from __future__ import annotations
 
+import json
+import platform
+import sys
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 from repro.fl.engine import FLConfig
+
+BENCH_SCHEMA = 1
 
 # CPU-scale analog of the paper's setup: 100 clients / CIFAR -> 12
 # clients / gaussian-mixture with disjoint public distribution.  Chosen
@@ -50,3 +56,39 @@ def timeit(fn: Callable, n: int = 5, warmup: int = 2) -> float:
 def emit(rows: List[Dict]) -> None:
     for r in rows:
         print(f"{r['name']},{r.get('us_per_call', 0.0):.1f},{r.get('derived', '')}")
+
+
+def bench_env() -> Dict:
+    """Environment/device metadata stamped into every BENCH file so a
+    baseline mismatch (CPU vs TPU, different host) is visible in the
+    diff.  Deliberately no timestamps: committed baselines must not
+    churn when regenerated on the same setup."""
+    import jax
+
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "device_kind": jax.devices()[0].device_kind,
+        "jax": jax.__version__,
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+    }
+
+
+def write_bench(path: str, name: str, rows: List[Dict],
+                quick: Optional[bool] = None) -> None:
+    """Write one benchmark's rows as a ``BENCH_<name>.json`` document —
+    schema: {bench, schema, quick, env, rows}; rows keep every
+    structured field the benchmark attached (``rounds_per_sec``,
+    ``*_bytes``, ...) beyond the printed CSV triple."""
+    doc = {
+        "bench": name,
+        "schema": BENCH_SCHEMA,
+        "quick": bool(quick) if quick is not None else None,
+        "env": bench_env(),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, sort_keys=True, indent=2)
+        f.write("\n")
+    print(f"# wrote {path} ({len(rows)} rows)", file=sys.stderr)

@@ -61,6 +61,9 @@ def run(rounds: int = 60, quick: bool = False):
             rows.append({
                 "name": f"codec_pareto_{strat}_{spec.replace('+', '_')}",
                 "us_per_call": 0.0,
+                "cum_uplink_bytes": up,
+                "server_acc": h.final_server_acc,
+                "uplink_x_vs_identity": ratio,
                 "derived": (f"cum_up_MB={up / 1e6:.3f};"
                             f"server_acc={h.final_server_acc:.3f};"
                             f"uplink_x_vs_identity={ratio:.2f}"),
@@ -71,10 +74,16 @@ def run(rounds: int = 60, quick: bool = False):
 def main():
     import argparse
 
+    from benchmarks._common import write_bench
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="", help="write BENCH json here")
     args = ap.parse_args()
-    emit(run(quick=args.quick))
+    rows = run(quick=args.quick)
+    emit(rows)
+    if args.out:
+        write_bench(args.out, "codec", rows, quick=args.quick)
 
 
 if __name__ == "__main__":

@@ -15,17 +15,25 @@ Two sweeps:
   way past single-device memory; on CPU it also exercises the exact
   production code path (the mesh uses every local device via
   ``best_data_axis``).
+- **fused vs per-op round path** (K=200/1000): the scanned engine with
+  ``fused_round=True`` runs codec round trip + masked aggregation +
+  ERA sharpening as one ``round_kernel`` pass instead of the per-op
+  chain (whose quantize kernel grids over all K*m soft-label rows).
+  Codec is ``cache_delta+quant8`` — the paper's full-compression
+  configuration and the deepest fused op chain.
 
 Both device engines draw from the identical jax key stream, so all
 engines run the same rounds.  ``--quick`` shrinks rounds/cohorts to CI
 smoke sizes (and adapts the mesh to however many devices the runner
-exposes, so it works at 1 device too).
+exposes, so it works at 1 device too); the fused sweep keeps its full
+K=200/1000 points — they ARE the measurement (the perf gate tracks
+their speedup) and stay CI-sized at a reduced round budget.
 """
 from __future__ import annotations
 
 import time
 
-from benchmarks._common import emit
+from benchmarks._common import emit, write_bench
 from repro.fl import (
     FederatedDistillation,
     FLConfig,
@@ -39,9 +47,13 @@ ROUNDS = 30
 CLIENT_COUNTS = (10, 50, 200)
 SHARD_ROUNDS = 10
 SHARD_CLIENT_COUNTS = (200, 1000, 4000)
+FUSED_ROUNDS = 8
+FUSED_CLIENT_COUNTS = (200, 1000)
+FUSED_CODEC = "cache_delta+quant8"
 QUICK_ROUNDS = 8
 QUICK_CLIENT_COUNTS = (10,)
 QUICK_SHARD_CLIENT_COUNTS = (16,)
+QUICK_FUSED_ROUNDS = 4
 
 
 def _cfg(n_clients: int, rounds: int) -> FLConfig:
@@ -72,11 +84,14 @@ def _scan_vs_host(counts, rounds) -> list:
         rows.append({
             "name": f"engine_host_K{K}",
             "us_per_call": t_host / rounds * 1e6,
+            "rounds_per_sec": rounds / t_host,
             "derived": f"{rounds / t_host:.1f} rounds/s",
         })
         rows.append({
             "name": f"engine_scan_K{K}",
             "us_per_call": t_scan / rounds * 1e6,
+            "rounds_per_sec": rounds / t_scan,
+            "speedup": t_host / t_scan,
             "derived": (f"{rounds / t_scan:.1f} rounds/s, "
                         f"{t_host / t_scan:.1f}x vs host loop"),
         })
@@ -101,14 +116,49 @@ def _shard_vs_scan(counts, rounds) -> list:
             # different round budget, so names must stay unique
             "name": f"engine_scan_base_K{K}",
             "us_per_call": t_scan / rounds * 1e6,
+            "rounds_per_sec": rounds / t_scan,
             "derived": f"{rounds / t_scan:.1f} rounds/s",
         })
         rows.append({
             "name": f"engine_shard_K{K}_d{data}",
             "us_per_call": t_shard / rounds * 1e6,
+            "rounds_per_sec": rounds / t_shard,
+            "speedup": t_scan / t_shard,
             "derived": (f"{rounds / t_shard:.1f} rounds/s, "
                         f"{t_scan / t_shard:.1f}x vs scan, "
                         f"{data} shards"),
+        })
+    return rows
+
+
+def _fused_vs_perop(counts, rounds) -> list:
+    import dataclasses
+
+    rows = []
+    for K in counts:
+        cfg = dataclasses.replace(_cfg(K, rounds), uplink_codec=FUSED_CODEC)
+        perop = ScannedFederatedDistillation(
+            cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=4)
+        t_perop = _time_run(perop, rounds)
+        fused = ScannedFederatedDistillation(
+            dataclasses.replace(cfg, fused_round=True),
+            STRATEGIES["scarlet"](beta=1.5), cache_duration=4)
+        t_fused = _time_run(fused, rounds)
+        rows.append({
+            "name": f"engine_scan_perop_K{K}",
+            "us_per_call": t_perop / rounds * 1e6,
+            "rounds_per_sec": rounds / t_perop,
+            "codec": FUSED_CODEC,
+            "derived": f"{rounds / t_perop:.1f} rounds/s, per-op chain",
+        })
+        rows.append({
+            "name": f"engine_scan_fused_K{K}",
+            "us_per_call": t_fused / rounds * 1e6,
+            "rounds_per_sec": rounds / t_fused,
+            "speedup": t_perop / t_fused,
+            "codec": FUSED_CODEC,
+            "derived": (f"{rounds / t_fused:.1f} rounds/s, "
+                        f"{t_perop / t_fused:.2f}x vs per-op chain"),
         })
     return rows
 
@@ -117,9 +167,11 @@ def run(quick: bool = False):
     if quick:
         rows = _scan_vs_host(QUICK_CLIENT_COUNTS, QUICK_ROUNDS)
         rows += _shard_vs_scan(QUICK_SHARD_CLIENT_COUNTS, QUICK_ROUNDS)
+        rows += _fused_vs_perop(FUSED_CLIENT_COUNTS, QUICK_FUSED_ROUNDS)
         return rows
     rows = _scan_vs_host(CLIENT_COUNTS, ROUNDS)
     rows += _shard_vs_scan(SHARD_CLIENT_COUNTS, SHARD_ROUNDS)
+    rows += _fused_vs_perop(FUSED_CLIENT_COUNTS, FUSED_ROUNDS)
     return rows
 
 
@@ -128,8 +180,12 @@ def main():
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="", help="write BENCH json here")
     args = ap.parse_args()
-    emit(run(quick=args.quick))
+    rows = run(quick=args.quick)
+    emit(rows)
+    if args.out:
+        write_bench(args.out, "engine", rows, quick=args.quick)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,127 @@
+"""Roofline terms for the FL round engines, from AOT-compiled HLO.
+
+Aims the launch-layer analysis stack (:mod:`repro.launch.hlo_analysis`
++ :mod:`repro.launch.roofline`) at the scan/shard round programs: each
+engine variant is AOT-lowered for a one-round batch
+(``engine.aot_lower``), compiled, and its optimized HLO + XLA cost
+analysis are reduced to the three roofline terms
+
+  compute_s    = dot FLOPs / peak_flops
+  memory_s     = HBM bytes accessed / hbm_bw
+  collective_s = collective bytes / link_bw
+
+plus the measured bottleneck (the max term).  Variants: scan per-op vs
+scan fused (``FLConfig.fused_round``) and the client-sharded engine —
+so the fused kernel's HBM-traffic reduction and the shard engine's
+psum traffic are both visible in one table.
+
+The hardware peaks come from a named :data:`repro.launch.roofline`
+preset (``--hw``, default ``tpu_v5e``).  On the CPU dev container the
+absolute seconds are notional, but the per-variant *ratios* (which
+term dominates, how much traffic the fused path removes) are real
+properties of the compiled program.
+
+  PYTHONPATH=src python -m benchmarks.engine_roofline [--quick] [--hw tpu_v5e]
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks._common import emit, write_bench
+from repro.fl import (
+    FLConfig,
+    ScannedFederatedDistillation,
+    ShardedFederatedDistillation,
+)
+from repro.fl.shard_engine import best_data_axis
+from repro.fl.strategies import STRATEGIES
+from repro.launch import hlo_analysis, roofline
+
+CODEC = "cache_delta+quant8"
+CLIENT_COUNTS = (200, 1000)
+QUICK_CLIENT_COUNTS = (200,)
+
+
+def _cfg(n_clients: int) -> FLConfig:
+    return FLConfig(
+        n_clients=n_clients, n_classes=10, dim=8, rounds=1,
+        local_steps=1, distill_steps=1, public_size=256, public_per_round=24,
+        private_size=200, alpha=0.05, hidden=12, eval_every=10**6, seed=0,
+        uplink_codec=CODEC)
+
+
+def _cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def _analyze(engine, *, scheme: str, K: int, chips: int, mesh: str, hw) -> dict:
+    compiled = engine.aot_lower(rounds=1).compile()
+    hlo = compiled.as_text()
+    cost = _cost_dict(compiled)
+    summary = hlo_analysis.analyze(hlo)
+    rl = roofline.compute_roofline_from_summary(
+        arch="fl_round", shape=f"K{K}", mesh_name=mesh, scheme=scheme,
+        chips=chips, summary=summary,
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        xla_flops=float(cost.get("flops", 0.0)),
+        model_flops=0.0, bytes_per_device=0.0, hw=hw)
+    return {
+        "name": f"roofline_{scheme}_K{K}",
+        "us_per_call": 0.0,
+        "compute_s": rl.compute_s,
+        "memory_s": rl.memory_s,
+        "collective_s": rl.collective_s,
+        "bottleneck": rl.bottleneck,
+        "dot_gflops_per_device": rl.hlo_gflops_per_device,
+        "hbm_gbytes_per_device": rl.hlo_gbytes_per_device,
+        "collective_gbytes_per_device": rl.collective_gbytes_per_device,
+        "collective_counts": {k: v for k, v in rl.collective_counts.items() if v},
+        "hw": rl.hw,
+        "chips": chips,
+        "derived": (f"bottleneck={rl.bottleneck};"
+                    f"hbm_GB={rl.hlo_gbytes_per_device:.4f};"
+                    f"coll_GB={rl.collective_gbytes_per_device:.6f}"),
+    }
+
+
+def run(quick: bool = False, hw: str = "tpu_v5e"):
+    rows = []
+    strat = lambda: STRATEGIES["scarlet"](beta=1.5)  # noqa: E731
+    for K in QUICK_CLIENT_COUNTS if quick else CLIENT_COUNTS:
+        cfg = _cfg(K)
+        for scheme, fused in (("scan_perop", False), ("scan_fused", True)):
+            eng = ScannedFederatedDistillation(
+                dataclasses.replace(cfg, fused_round=fused), strat(),
+                cache_duration=4)
+            rows.append(_analyze(eng, scheme=scheme, K=K, chips=1,
+                                 mesh="single", hw=hw))
+        data = best_data_axis(K)
+        if data > 1:  # sharded variant only when a mesh exists
+            eng = ShardedFederatedDistillation(
+                dataclasses.replace(cfg, fused_round=True), strat(),
+                cache_duration=4, mesh=f"{data}")
+            rows.append(_analyze(eng, scheme="shard_fused", K=K, chips=data,
+                                 mesh=f"{data}", hw=hw))
+    return rows
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--hw", default="tpu_v5e",
+                    choices=sorted(roofline.HW_PRESETS))
+    ap.add_argument("--out", default="", help="write BENCH json here")
+    args = ap.parse_args()
+    rows = run(quick=args.quick, hw=args.hw)
+    emit(rows)
+    if args.out:
+        write_bench(args.out, "engine_roofline", rows, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

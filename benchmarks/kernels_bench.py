@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks._common import emit, timeit
+from benchmarks._common import emit, timeit, write_bench
 from repro.kernels import ops, ref
 from repro.kernels.runtime import default_interpret
 
@@ -20,10 +20,40 @@ KEY = jax.random.PRNGKey(0)
 _MODE = "pallas interpret" if default_interpret() else "pallas native tpu"
 
 
-def run():
+def _fused_round_rows(shapes) -> list:
+    """Fused round hot path vs the per-op chain it replaces (qdq
+    round trip over all K*m rows + simplex + weighted mean + ERA), on
+    the engines' uplink shapes."""
+    rows = []
+    for K, m, N in shapes:
+        zc = jax.random.dirichlet(KEY, jnp.ones(N), (K, m))
+        w = jnp.ones(K)
+
+        @jax.jit
+        def perop(z):
+            zq = ops.quantize_dequantize(z, 8)
+            zq = jnp.maximum(zq, 0.0)
+            zq = zq / jnp.maximum(zq.sum(-1, keepdims=True), 1e-9)
+            return ops.enhanced_era(jnp.mean(zq, axis=0), 1.5)
+
+        rows.append({
+            "name": f"round_perop_K{K}_m{m}_N{N}",
+            "us_per_call": timeit(lambda: perop(zc).block_until_ready()),
+            "derived": f"{_MODE} (qdq + simplex + mean + era chain)",
+        })
+        rows.append({
+            "name": f"round_fused_K{K}_m{m}_N{N}",
+            "us_per_call": timeit(lambda: ops.fused_round(
+                zc, w, 1.5, mode="quant", bits=8).block_until_ready()),
+            "derived": f"{_MODE} (one VMEM pass)",
+        })
+    return rows
+
+
+def run(quick: bool = False):
     rows = []
     # Enhanced ERA on the paper's per-round shape
-    for B, N in ((1000, 10), (1000, 100)):
+    for B, N in ((1000, 10),) if quick else ((1000, 10), (1000, 100)):
         z = jax.random.dirichlet(KEY, jnp.ones(N), (B,))
         f_ref = jax.jit(lambda z: ref.enhanced_era(z, 1.5))
         rows.append({
@@ -37,7 +67,8 @@ def run():
             "derived": _MODE,
         })
     # fused client-mean + sharpening (the SCARLET server aggregation path)
-    for K, B, N in ((10, 1000, 10), (50, 1000, 100)):
+    for K, B, N in ((10, 1000, 10),) if quick else ((10, 1000, 10),
+                                                    (50, 1000, 100)):
         zc = jax.random.dirichlet(KEY, jnp.ones(N), (K, B))
         f_ref = jax.jit(lambda z: ref.enhanced_era(jnp.mean(z, axis=0), 1.5))
         rows.append({
@@ -51,27 +82,40 @@ def run():
                 lambda: ops.enhanced_era_fused(zc, 1.5).block_until_ready()),
             "derived": f"{_MODE} (one VMEM pass)",
         })
-    # distillation loss at LM vocab
-    B, V = 64, 32_000
-    logits = jax.random.normal(KEY, (B, V))
-    teacher = jax.nn.softmax(jax.random.normal(KEY, (B, V)))
-    f_ref = jax.jit(lambda l, t: ref.distill_loss(l, t).mean())
-    rows.append({
-        "name": f"distill_ref_B{B}_V{V}",
-        "us_per_call": timeit(lambda: f_ref(logits, teacher).block_until_ready()),
-        "derived": "jnp oracle",
-    })
-    rows.append({
-        "name": f"distill_pallas_B{B}_V{V}",
-        "us_per_call": timeit(
-            lambda: ops.distill_loss(logits, teacher).block_until_ready(), n=3),
-        "derived": _MODE,
-    })
+    # the fused round hot path on engine uplink shapes (m = |P^t|)
+    rows += _fused_round_rows(((200, 24, 10),) if quick
+                              else ((200, 24, 10), (1000, 24, 10)))
+    if not quick:
+        # distillation loss at LM vocab
+        B, V = 64, 32_000
+        logits = jax.random.normal(KEY, (B, V))
+        teacher = jax.nn.softmax(jax.random.normal(KEY, (B, V)))
+        f_ref = jax.jit(lambda l, t: ref.distill_loss(l, t).mean())
+        rows.append({
+            "name": f"distill_ref_B{B}_V{V}",
+            "us_per_call": timeit(lambda: f_ref(logits, teacher).block_until_ready()),
+            "derived": "jnp oracle",
+        })
+        rows.append({
+            "name": f"distill_pallas_B{B}_V{V}",
+            "us_per_call": timeit(
+                lambda: ops.distill_loss(logits, teacher).block_until_ready(), n=3),
+            "derived": _MODE,
+        })
     return rows
 
 
 def main():
-    emit(run())
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="", help="write BENCH json here")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    emit(rows)
+    if args.out:
+        write_bench(args.out, "kernels", rows, quick=args.quick)
 
 
 if __name__ == "__main__":

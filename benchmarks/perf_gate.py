@@ -1,0 +1,126 @@
+"""CI perf-regression gate over committed ``BENCH_*.json`` baselines.
+
+Compares a freshly generated set of BENCH documents (``--current-dir``)
+against the committed baselines (``--baseline-dir``, default
+``benchmarks/baselines``) and fails when a tracked metric regresses
+beyond the tolerance band:
+
+- ``us_per_call`` (lower is better): fails when
+  ``current > baseline * (1 + ratio_tol) + abs_tol_us`` — the
+  multiplicative band absorbs CI-runner speed variance, the additive
+  floor keeps microsecond-scale rows from tripping on scheduler noise;
+- ``rounds_per_sec`` / ``speedup`` (higher is better): fails when
+  ``current < baseline * (1 - ratio_tol)`` — this is the term that
+  catches the fused round path silently losing its advantage;
+- a baseline row or file missing from the current run fails (coverage
+  must never silently shrink); new rows/files are allowed;
+- an environment mismatch (different backend or device kind) fails:
+  cross-hardware timing comparisons are meaningless.
+
+The comparison core (:func:`gate_docs`) is a pure function over the two
+documents — unit-tested with simulated regressions in
+``tests/test_perf_gate.py``.
+
+  PYTHONPATH=src python -m benchmarks.perf_gate --current-dir /tmp/bench
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+DEFAULT_RATIO_TOL = 0.75
+DEFAULT_ABS_TOL_US = 500.0
+
+# metric -> direction ("lower"/"higher" is better)
+GATED_METRICS = {
+    "us_per_call": "lower",
+    "rounds_per_sec": "higher",
+    "speedup": "higher",
+}
+
+
+def gate_docs(baseline: Dict, current: Dict, *,
+              ratio_tol: float = DEFAULT_RATIO_TOL,
+              abs_tol_us: float = DEFAULT_ABS_TOL_US) -> List[str]:
+    """Failure messages from comparing one BENCH document pair."""
+    fails: List[str] = []
+    bench = baseline.get("bench", "?")
+    b_env, c_env = baseline.get("env", {}), current.get("env", {})
+    for k in ("backend", "device_kind"):
+        if b_env.get(k) != c_env.get(k):
+            fails.append(
+                f"{bench}: env mismatch on {k!r}: baseline "
+                f"{b_env.get(k)!r} vs current {c_env.get(k)!r} "
+                "(regenerate the baseline on this hardware)")
+    cur_rows = {r["name"]: r for r in current.get("rows", [])}
+    for row in baseline.get("rows", []):
+        name = row["name"]
+        cur = cur_rows.get(name)
+        if cur is None:
+            fails.append(f"{bench}/{name}: row missing from current run")
+            continue
+        for metric, direction in GATED_METRICS.items():
+            if metric not in row or not row[metric]:
+                continue
+            base_v = float(row[metric])
+            cur_v = float(cur.get(metric, 0.0))
+            if direction == "lower":
+                limit = base_v * (1.0 + ratio_tol) + abs_tol_us
+                if cur_v > limit:
+                    fails.append(
+                        f"{bench}/{name}: {metric} regressed "
+                        f"{base_v:.1f} -> {cur_v:.1f} (limit {limit:.1f})")
+            else:
+                limit = base_v * (1.0 - ratio_tol)
+                if cur_v < limit:
+                    fails.append(
+                        f"{bench}/{name}: {metric} regressed "
+                        f"{base_v:.3f} -> {cur_v:.3f} (floor {limit:.3f})")
+    return fails
+
+
+def _load(path: str) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def gate_dirs(baseline_dir: str, current_dir: str, *,
+              ratio_tol: float = DEFAULT_RATIO_TOL,
+              abs_tol_us: float = DEFAULT_ABS_TOL_US) -> List[str]:
+    fails: List[str] = []
+    paths = sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json")))
+    if not paths:
+        return [f"no BENCH_*.json baselines found in {baseline_dir}"]
+    for bpath in paths:
+        fname = os.path.basename(bpath)
+        cpath = os.path.join(current_dir, fname)
+        if not os.path.exists(cpath):
+            fails.append(f"{fname}: missing from current dir {current_dir}")
+            continue
+        fails += gate_docs(_load(bpath), _load(cpath),
+                           ratio_tol=ratio_tol, abs_tol_us=abs_tol_us)
+    return fails
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines")
+    ap.add_argument("--current-dir", required=True)
+    ap.add_argument("--ratio-tol", type=float, default=DEFAULT_RATIO_TOL)
+    ap.add_argument("--abs-tol-us", type=float, default=DEFAULT_ABS_TOL_US)
+    args = ap.parse_args()
+    fails = gate_dirs(args.baseline_dir, args.current_dir,
+                      ratio_tol=args.ratio_tol, abs_tol_us=args.abs_tol_us)
+    for msg in fails:
+        print(f"PERF GATE FAIL: {msg}")
+    if fails:
+        sys.exit(1)
+    print("perf gate: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ import traceback
 from benchmarks import (
     codec_pareto,
     engine_bench,
+    engine_roofline,
     ext_beyond_paper,
     hetero_bench,
     fig3_cache_sim,
@@ -48,9 +49,20 @@ SUITE = {
     "fig18": (fig18_convergence_proxy, {"rounds": 80}),
     "kernels": (kernels_bench, {}),
     "engine": (engine_bench, {}),
+    "engine_roofline": (engine_roofline, {}),
     "codec_pareto": (codec_pareto, {}),
     "hetero": (hetero_bench, {}),
     "ext": (ext_beyond_paper, {"rounds": 80}),
+}
+
+# benchmarks whose rows feed the perf-regression gate: --out-dir writes
+# their BENCH_<file>.json next to each other (codec_pareto keeps the
+# short "codec" document name)
+BENCH_FILES = {
+    "engine": "engine",
+    "kernels": "kernels",
+    "codec_pareto": "codec",
+    "engine_roofline": "engine_roofline",
 }
 
 QUICK_ROUNDS = 25
@@ -60,6 +72,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--out-dir", default="",
+                    help="write BENCH_<name>.json per gated benchmark here")
     args = ap.parse_args()
 
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(SUITE)
@@ -76,6 +90,15 @@ def main() -> None:
         try:
             rows = mod.run(**kw)
             emit(rows)
+            if args.out_dir and name in BENCH_FILES:
+                import os
+
+                from benchmarks._common import write_bench
+
+                os.makedirs(args.out_dir, exist_ok=True)
+                doc = BENCH_FILES[name]
+                write_bench(os.path.join(args.out_dir, f"BENCH_{doc}.json"),
+                            doc, rows, quick=args.quick)
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception:  # noqa: BLE001
             failures += 1

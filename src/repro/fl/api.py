@@ -37,6 +37,7 @@ def run_method(
     codec: Optional[str] = None,
     downlink_codec: Optional[str] = None,
     cohorts: Optional[Sequence[CohortSpec]] = None,
+    fused_round: Optional[bool] = None,
     **strategy_kw,
 ) -> History:
     """Run one FL method end-to-end and return its History.
@@ -71,6 +72,13 @@ def run_method(
     cohort mix.  Parameter-sharing baselines (fedavg) and the
     no-collaboration baseline reject cohorts: they assume the single
     homogeneous ``(hidden, mlp_depth)`` model.
+
+    ``fused_round`` (shorthand for ``FLConfig.fused_round``) opts the
+    scan/shard engines into the fused round hot path
+    (:mod:`repro.kernels.round_kernel`): uplink codec round trip +
+    masked aggregation + sharpening in one Pallas kernel.  The host
+    engine ignores it — it is the per-op reference the fused path is
+    validated against.
     """
     if engine not in _ENGINES:
         raise ValueError(f"unknown engine: {engine!r} "
@@ -81,6 +89,8 @@ def run_method(
         cfg = dataclasses.replace(cfg, downlink_codec=downlink_codec)
     if cohorts is not None:
         cfg = dataclasses.replace(cfg, cohorts=tuple(cohorts))
+    if fused_round is not None:
+        cfg = dataclasses.replace(cfg, fused_round=fused_round)
     if method in ("fedavg", "individual"):
         if cfg.cohorts:
             raise ValueError(

@@ -50,3 +50,11 @@ class FLConfig:
     # "production[_multipod]"; see repro.fl.shard_engine.resolve_mesh.
     # Explicit specs require n_clients divisible by the data-axis size.
     mesh_spec: str = "auto"
+    # opt-in fast path: run the round hot path (uplink codec round trip
+    # + participation-weighted reduction + ERA sharpening) as one fused
+    # Pallas kernel (repro.kernels.round_kernel) instead of the per-op
+    # chain.  Scan/shard engines only; requires a fused-capable strategy
+    # and a kernel-expressible uplink codec (identity / quantN /
+    # cache_delta[+quantN]).  The host engine ignores the flag — it is
+    # the per-op reference the fused path is validated against.
+    fused_round: bool = False

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import cache as cache_lib
 from repro.core import comm as comm_lib
+from repro.kernels import round_kernel
 from repro.fl.rounds import (
     FederatedDistillation,
     History,
@@ -78,6 +79,22 @@ class ScannedFederatedDistillation(FederatedDistillation):
                 raise ValueError(
                     f"codec {codec.name!r} is not scan-safe; use the "
                     "host loop")
+        # fused round fast path (FLConfig.fused_round): validated here so
+        # a bad combination fails at construction, not mid-scan
+        self._fused = bool(self.cfg.fused_round)
+        self._fused_spec = None
+        if self._fused:
+            if not self.strategy.supports_fused_round:
+                raise ValueError(
+                    f"fused_round: strategy {self.strategy.name!r} has no "
+                    "fused round path (adaptive beta and host-side "
+                    "strategies need the per-op chain)")
+            self._fused_spec = round_kernel.codec_kernel_spec(self.codec_up)
+            if self._fused_spec is None:
+                raise ValueError(
+                    f"fused_round: uplink codec {self.codec_up.name!r} is "
+                    "not kernel-expressible (supported: identity, quantN, "
+                    "cache_delta[+quantN])")
         self._scan_fn = None
 
     # ------------------------------------------------------------------
@@ -128,11 +145,21 @@ class ScannedFederatedDistillation(FederatedDistillation):
         x_round = self.x_pub[idx]
         z_all = self._predict_all(cp, x_round)             # (K, m, N)
         z_all = s.transmit(z_all, None)
-        if not self.codec_up.is_identity:  # lossy wire: what the server sees
-            z_all = self.codec_up.roundtrip(z_all, base=base,
-                                            present=base_present)
-        um = s.upload_mask(z_all)
-        fresh = s.aggregate_masked(z_all, part_f, um, t)
+        if self._fused:
+            # fused fast path: uplink codec round trip + masked
+            # aggregation + sharpening in one round_kernel VMEM pass
+            um = s.upload_mask(z_all)
+            fbase = (round_kernel.resolve_delta_base(
+                         base, base_present, c.public_per_round, c.n_classes)
+                     if self._fused_spec["mode"] == "delta" else None)
+            fresh = s.aggregate_masked_fused(z_all, part_f,
+                                             self._fused_spec, fbase, t)
+        else:
+            if not self.codec_up.is_identity:  # lossy wire: server's view
+                z_all = self.codec_up.roundtrip(z_all, base=base,
+                                                present=base_present)
+            um = s.upload_mask(z_all)
+            fresh = s.aggregate_masked(z_all, part_f, um, t)
         if not self.codec_down.is_identity:  # decoded broadcast (see rounds.py)
             fresh = self.codec_down.roundtrip(fresh, base=base,
                                               present=base_present)
@@ -250,12 +277,34 @@ class ScannedFederatedDistillation(FederatedDistillation):
         return self._finish_run(carry, ys, eval_np, t0)
 
     def _run_rounds(self, ts, offline, do_eval):
-        """Launch the device program for the given round batch; the
+        """Launch the device program for the given round batch."""
+        return self._program()(*self._aot_args(ts, offline, do_eval))
+
+    def _program(self):
+        """The jitted whole-run program (lazily built, cached); the
         client-sharded engine overrides this with its shard_map twin."""
         if self._scan_fn is None:
             self._scan_fn = jax.jit(
                 lambda carry, xs: jax.lax.scan(self._round_device, carry, xs))
-        return self._scan_fn(self._initial_carry(), (ts, offline, do_eval))
+        return self._scan_fn
+
+    def _aot_args(self, ts, offline, do_eval):
+        """Concrete arguments matching ``_program()``'s signature."""
+        return (self._initial_carry(), (ts, offline, do_eval))
+
+    def aot_lower(self, rounds: int = 1):
+        """AOT-lower the round program without running it: the
+        ``jax.stages.Lowered`` for a ``rounds``-round batch (no eval
+        rounds).  ``.compile()`` gives optimized HLO + XLA cost analysis
+        — what :mod:`benchmarks.engine_roofline` feeds the
+        :mod:`repro.launch.roofline` model."""
+        c = self.cfg
+        t0 = self.t_done
+        ts = jnp.arange(t0 + 1, t0 + rounds + 1, dtype=jnp.int32)
+        offline = jnp.asarray(
+            self.scenario.offline_masks(rounds, c.n_clients, start=t0 + 1))
+        do_eval = jnp.zeros(rounds, bool)
+        return self._program().lower(*self._aot_args(ts, offline, do_eval))
 
     def _finish_run(self, carry, ys, eval_np, t0) -> History:
         # persist final device state (parity checks, chained run() calls)

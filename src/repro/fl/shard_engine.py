@@ -76,6 +76,7 @@ from repro.fl.rounds import (
     val_loss_soft,
 )
 from repro.fl.scan_engine import ScannedFederatedDistillation
+from repro.kernels import round_kernel
 from repro.launch.mesh import (
     make_production_mesh,
     make_test_mesh,
@@ -288,12 +289,24 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
         x_round = consts["x_pub"][idx]
         z_all = self._predict_all(cp, x_round)         # (kloc, m, N)
         z_all = s.transmit(z_all, None)
-        if not self.codec_up.is_identity:
-            z_all = self.codec_up.roundtrip(z_all, base=base,
-                                            present=base_present)
-        um = s.upload_mask(z_all)
-        partials = jax.lax.psum(
-            s.partial_aggregate(z_all, part_f, um, t), CLIENT_AXIS)
+        if self._fused:
+            # fused fast path: codec round trip + linear moments in one
+            # round_kernel pass per shard; the psum + finalize
+            # nonlinearity are unchanged from the per-op two-phase path
+            um = s.upload_mask(z_all)
+            fbase = (round_kernel.resolve_delta_base(
+                         base, base_present, c.public_per_round, c.n_classes)
+                     if self._fused_spec["mode"] == "delta" else None)
+            partials = jax.lax.psum(
+                s.partial_aggregate_fused(z_all, part_f, self._fused_spec,
+                                          fbase, t), CLIENT_AXIS)
+        else:
+            if not self.codec_up.is_identity:
+                z_all = self.codec_up.roundtrip(z_all, base=base,
+                                                present=base_present)
+            um = s.upload_mask(z_all)
+            partials = jax.lax.psum(
+                s.partial_aggregate(z_all, part_f, um, t), CLIENT_AXIS)
         fresh = s.finalize_aggregate(partials, t)      # replicated
         if not self.codec_down.is_identity:
             fresh = self.codec_down.roundtrip(fresh, base=base,
@@ -399,8 +412,7 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
         return new_carry, ys
 
     # ------------------------------------------------------------------
-    def _run_rounds(self, ts, offline, do_eval):
-        consts = self._consts()
+    def _program(self):
         if self._shard_fn is None:
             carry_specs, xs_specs, consts_specs = self._specs()
             in_specs = (carry_specs, xs_specs, consts_specs)
@@ -421,5 +433,8 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
                               out_specs=(carry_specs, P()),
                               check_rep=False),
                 in_shardings=shardings)
-        return self._shard_fn(self._initial_carry(),
-                              (ts, offline, do_eval), consts)
+        return self._shard_fn
+
+    def _aot_args(self, ts, offline, do_eval):
+        return (self._initial_carry(), (ts, offline, do_eval),
+                self._consts())

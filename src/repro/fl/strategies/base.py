@@ -92,3 +92,35 @@ class Strategy:
                          upload_mask: Optional[jnp.ndarray], t) -> jnp.ndarray:
         return self.finalize_aggregate(
             self.partial_aggregate(z_clients, part, upload_mask, t), t)
+
+    # ------------------------------------------------------------------
+    # Fused round fast path (FLConfig.fused_round).
+    #
+    # Strategies that can express their codec-roundtrip + masked
+    # aggregation as one :func:`repro.kernels.ops.fused_round` call
+    # advertise it here; engines validate the flag against this at
+    # construction.  ``codec_spec`` is ``round_kernel.codec_kernel_spec``
+    # output ({"mode": ..., "bits": ...}); ``base`` is the resolved
+    # delta base (None outside delta mode).  The fused variants must
+    # match the per-op path bit for bit in interpret mode and to one
+    # quantization step natively (tests/test_round_kernel.py).
+
+    supports_fused_round = False
+
+    def aggregate_masked_fused(self, z_clients: jnp.ndarray,
+                               part: jnp.ndarray, codec_spec: Dict,
+                               base: Optional[jnp.ndarray],
+                               t) -> jnp.ndarray:
+        """Fused twin of codec.roundtrip + ``aggregate_masked``."""
+        raise NotImplementedError(
+            f"strategy {self.name!r} has no fused round path")
+
+    def partial_aggregate_fused(self, z_clients: jnp.ndarray,
+                                part: jnp.ndarray, codec_spec: Dict,
+                                base: Optional[jnp.ndarray],
+                                t) -> Dict[str, jnp.ndarray]:
+        """Fused twin of codec.roundtrip + ``partial_aggregate``: the
+        codec round trip and the linear moments in one kernel pass;
+        entries still sum across shards (finalize is unchanged)."""
+        raise NotImplementedError(
+            f"strategy {self.name!r} has no fused round path")

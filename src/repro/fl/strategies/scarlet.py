@@ -72,3 +72,36 @@ class EnhancedERAStrategy(Strategy):
         # out entirely, but the two-phase contract is total, so align.
         return jnp.where(jnp.sum(part) > 0, out,
                          jnp.full_like(out, 1.0 / out.shape[-1]))
+
+    # ------------------------------------------------------------------
+    # Fused round fast path (FLConfig.fused_round): codec round trip +
+    # masked aggregation + sharpening in one round_kernel pass.  Static
+    # beta only — adaptive beta needs the client mean before sharpening,
+    # which the fused kernel never materializes.
+
+    @property
+    def supports_fused_round(self):
+        return self.opts.get("beta", 1.5) != "adaptive"
+
+    def aggregate_masked_fused(self, z, part, codec_spec, base, t):
+        beta = self.opts.get("beta", 1.5)
+        # same rescaling as aggregate_masked: the kernel divides its
+        # weighted sum by K before sharpening, so weight participants by
+        # K/n_part to recover the participant mean
+        k_clients = z.shape[0]
+        n_part = jnp.maximum(jnp.sum(part), 1.0)
+        w = part * (k_clients / n_part)
+        out = kops.fused_round(z, w, beta, base, mode=codec_spec["mode"],
+                               bits=codec_spec["bits"], sharpen=True)
+        # total-outage guard outside the kernel, as in aggregate_masked
+        return jnp.where(jnp.sum(part) > 0, out,
+                         jnp.full_like(out, 1.0 / out.shape[-1]))
+
+    def partial_aggregate_fused(self, z, part, codec_spec, base, t):
+        # linear phase only: codec round trip + participation-weighted
+        # sum; sharpening happens once in finalize_aggregate after the
+        # cross-shard psum, exactly as in the per-op two-phase path
+        zsum = kops.fused_round(z, part, None, base,
+                                mode=codec_spec["mode"],
+                                bits=codec_spec["bits"], sharpen=False)
+        return {"zsum": zsum, "wsum": jnp.sum(part)}

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import align_block_rows, resolve_interpret
 
 _EPS = 1e-12
 
@@ -61,6 +61,8 @@ def enhanced_era(z_mean: jnp.ndarray, beta, block_b: int = 256,
     """
     interpret = resolve_interpret(interpret)
     B, N = z_mean.shape
+    # shrink the block to the input, kept 8-aligned (f32 sublane tiling)
+    block_b = align_block_rows(block_b, B)
     n_pad = (-N) % 128
     b_pad = (-B) % block_b
     z = jnp.pad(z_mean, ((0, b_pad), (0, n_pad)))  # pad rows with zeros
@@ -87,6 +89,8 @@ def enhanced_era_fused(z_clients: jnp.ndarray, beta, block_b: int = 128,
     """(K, B, N) client soft-labels -> aggregated + sharpened (B, N)."""
     interpret = resolve_interpret(interpret)
     K, B, N = z_clients.shape
+    # shrink the (default 128-row) block to small B, kept 8-aligned
+    block_b = align_block_rows(block_b, B)
     n_pad = (-N) % 128
     b_pad = (-B) % block_b
     z = jnp.pad(z_clients, ((0, 0), (0, b_pad), (0, n_pad)))

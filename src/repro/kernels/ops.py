@@ -10,7 +10,14 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels import attn_kernel, distill_kernel, era_kernel, quant_kernel
+from repro.kernels import (
+    attn_kernel,
+    distill_kernel,
+    era_kernel,
+    quant_kernel,
+    round_kernel,
+)
+from repro.kernels.runtime import align_block_rows
 from repro.kernels.runtime import default_interpret as _interpret
 
 
@@ -18,7 +25,10 @@ def enhanced_era(z_mean: jnp.ndarray, beta, block_b: int = 256) -> jnp.ndarray:
     """(..., N) -> sharpened (..., N); leading dims flattened to rows."""
     shape = z_mean.shape
     flat = z_mean.reshape(-1, shape[-1])
-    out = era_kernel.enhanced_era(flat, beta, block_b=min(block_b, max(flat.shape[0], 8)),
+    # shrink-to-input must stay 8-aligned (f32 sublane tiling): a bare
+    # min() produced blocks like 10 that mis-tile on native TPU
+    out = era_kernel.enhanced_era(flat, beta,
+                                  block_b=align_block_rows(block_b, flat.shape[0]),
                                   interpret=_interpret())
     return out.reshape(shape)
 
@@ -26,6 +36,18 @@ def enhanced_era(z_mean: jnp.ndarray, beta, block_b: int = 256) -> jnp.ndarray:
 def enhanced_era_fused(z_clients: jnp.ndarray, beta) -> jnp.ndarray:
     """(K, B, N) -> (B, N): fused client-mean + sharpening."""
     return era_kernel.enhanced_era_fused(z_clients, beta, interpret=_interpret())
+
+
+def fused_round(z_clients: jnp.ndarray, weights: jnp.ndarray, beta=None,
+                base: jnp.ndarray | None = None, *, mode: str = "identity",
+                bits: int | None = None, sharpen: bool = True) -> jnp.ndarray:
+    """(K, m, N) client stack -> (m, N): uplink codec round trip +
+    participation-weighted reduction + (optional) Enhanced-ERA
+    sharpening, all in one VMEM pass per row block.  See
+    :mod:`repro.kernels.round_kernel` for the mode/weight semantics."""
+    return round_kernel.fused_round(z_clients, weights, beta, base,
+                                    mode=mode, bits=bits, sharpen=sharpen,
+                                    interpret=_interpret())
 
 
 def quantize_dequantize(z: jnp.ndarray, bits: int, block_b: int = 256) -> jnp.ndarray:

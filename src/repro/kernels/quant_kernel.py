@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import align_block_rows, resolve_interpret
 
 _EPS_SCALE = 1e-9
 
@@ -35,7 +35,11 @@ def _qdq_kernel(z_ref, o_ref, *, levels: float, n_valid: int):
     zmin = jnp.min(jnp.where(valid, z, jnp.inf), axis=-1, keepdims=True)
     zmax = jnp.max(jnp.where(valid, z, -jnp.inf), axis=-1, keepdims=True)
     scale = jnp.maximum(zmax - zmin, _EPS_SCALE)
-    q = jnp.round((z - zmin) / scale * levels) / levels
+    # clamp to the level range: valid in-range lanes land in [0, 1] by
+    # construction, but padded lanes and eps-scale degenerate rows
+    # (constant rows, N=1) can fall outside and would dequantize beyond
+    # [row_min, row_max] — the clamp pins the round trip to the row range
+    q = jnp.clip(jnp.round((z - zmin) / scale * levels) / levels, 0.0, 1.0)
     o_ref[...] = (q * scale + zmin).astype(o_ref.dtype)
 
 
@@ -52,7 +56,7 @@ def quantize_dequantize(z: jnp.ndarray, bits: int, block_b: int = 256,
     interpret = resolve_interpret(interpret)
     B, N = z.shape
     # shrink the block to the input, kept 8-aligned (f32 sublane tiling)
-    block_b = -(-max(8, min(block_b, B)) // 8) * 8
+    block_b = align_block_rows(block_b, B)
     n_pad = (-N) % 128
     b_pad = (-B) % block_b
     zp = jnp.pad(z, ((0, b_pad), (0, n_pad)))  # pad lanes masked in-kernel

@@ -20,6 +20,35 @@ def enhanced_era_fused(z_clients: jnp.ndarray, beta: float) -> jnp.ndarray:
     return enhanced_era(jnp.mean(z_clients.astype(jnp.float32), axis=0), beta)
 
 
+def fused_round(z_clients: jnp.ndarray, weights: jnp.ndarray, beta=None,
+                base: jnp.ndarray | None = None, *, mode: str = "identity",
+                bits: int | None = None, sharpen: bool = True) -> jnp.ndarray:
+    """Oracle for the fused round hot path: per-client uplink codec
+    round trip, weighted reduction, optional Enhanced-ERA sharpening —
+    composed from the per-op oracles / codec math (see
+    ``repro.kernels.round_kernel`` for the contract)."""
+    z = z_clients.astype(jnp.float32)
+    K, M, N = z.shape
+    if mode == "quant":
+        z = quantize_dequantize(z, bits)
+        z = jnp.maximum(z, 0.0)
+        z = z / jnp.maximum(z.sum(axis=-1, keepdims=True), 1e-9)
+    elif mode == "delta":
+        b = base.astype(jnp.float32)[None]          # (1, M, N)
+        r = z - b
+        r = r[..., :-1]                             # last class sum-implied
+        if bits is not None:
+            r = quantize_dequantize(r, bits)
+        r = jnp.concatenate([r, -r.sum(axis=-1, keepdims=True)], axis=-1)
+        z = b + r
+        z = jnp.maximum(z, 0.0)
+        z = z / jnp.maximum(z.sum(axis=-1, keepdims=True), 1e-9)
+    zsum = jnp.tensordot(weights.astype(jnp.float32), z, axes=(0, 0))
+    if sharpen:
+        return enhanced_era(zsum / K, beta).astype(z_clients.dtype)
+    return zsum.astype(z_clients.dtype)
+
+
 def quantize_dequantize(z: jnp.ndarray, bits: int) -> jnp.ndarray:
     """Per-row min-max uniform quantization round trip over the last axis."""
     levels = float(2 ** bits - 1)

@@ -1,0 +1,234 @@
+"""Pallas TPU kernel for the fused SCARLET round hot path.
+
+Every round the server pulls a ``(K, m, N)`` soft-label stack through
+the same op chain: uplink codec round trip (per-row min-max
+quantize-dequantize, optionally residual-coded against the synchronized
+cache), participation-weighted client reduction, and Enhanced-ERA power
+sharpening (Eq. 4).  Run as separate ops (``quant_kernel`` +
+``_simplex`` + weighted mean + ``era_kernel``) the stack crosses HBM
+three-plus times per round; this kernel streams each row block through
+VMEM exactly once — codec, reduction, and sharpening applied back to
+back while the block is resident.
+
+Per ``m``-row block the kernel sees the full client axis
+(``(K, bm, Np)`` BlockSpec, like ``era_kernel.enhanced_era_fused``), so
+the client reduction completes inside the block and the sharpening
+nonlinearity can fuse behind it.  ``bm`` is auto-shrunk to a VMEM
+budget as K grows (the K axis is resident per block) and kept 8-aligned
+(``runtime.align_block_rows``); the class dim is padded to 128 lanes
+and masked in-kernel with ``broadcasted_iota`` lane predicates, exactly
+as in the per-op kernels it replaces.
+
+Codec modes (must mirror ``repro.compress.codecs`` bit for bit — the
+engines' comm ledger is analytic, so values may drift only within one
+quantization step, and in interpret mode they do not drift at all):
+
+- ``"identity"``: no wire loss;
+- ``"quant"``: per-row min-max round trip to ``bits`` bits over the N
+  valid lanes + simplex re-projection (``QuantCodec(renormalize=True)``);
+- ``"delta"``: residual vs the resolved cache base, last class dropped
+  (sum-zero constraint), inner min-max round trip over the first
+  ``N - 1`` lanes when ``bits`` is set, reconstruction + simplex
+  re-projection (``CacheDeltaCodec[+quantB]``).
+
+Weighting: the kernel computes ``sum_k w_k * z_k`` and, when
+``sharpen=True``, divides by K before sharpening — so the scan engine
+passes ``w = part * (K / n_part)`` to reproduce
+``scarlet.aggregate_masked`` exactly, while the shard engine passes the
+raw participation mask with ``sharpen=False`` to get the two-phase
+contract's linear moment ``zsum`` (psum'd across shards before
+``finalize_aggregate`` sharpens once).
+
+The total-outage uniform-teacher guard stays *outside* the kernel (a
+``jnp.where`` on the tiny ``(m, N)`` output) so it matches
+``scarlet.aggregate_masked`` bit for bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import align_block_rows, resolve_interpret
+
+# numeric constants mirrored from the per-op path: one-quantization-step
+# parity depends on using the *same* epsilons
+_EPS_ERA = 1e-12       # era_kernel._EPS / core.era._EPS
+_EPS_SCALE = 1e-9      # quant_kernel._EPS_SCALE
+_EPS_SIMPLEX = 1e-9    # compress.codecs._EPS
+
+MODES = ("identity", "quant", "delta")
+
+# beta rides in SMEM as a (1,) array (scalar memory; see era_kernel)
+_BETA_SPEC = pl.BlockSpec(memory_space=pltpu.SMEM)
+
+# VMEM budget for the (K, bm, Np) block: the K axis is resident per
+# block, so bm must shrink as K grows.  Native TPU keeps headroom for
+# Mosaic's double buffering; the interpreter has no VMEM, so a larger
+# budget just means fewer grid steps.
+_VMEM_BUDGET_NATIVE = 4 * 2 ** 20
+_VMEM_BUDGET_INTERPRET = 16 * 2 ** 20
+
+
+def _qdq(r, valid, levels):
+    """In-block min-max round trip over the ``valid`` lanes of each row
+    — the exact ``quant_kernel._qdq_kernel`` math (incl. the [0, 1]
+    level clamp), applied to an already-resident (K, bm, Np) block."""
+    rmin = jnp.min(jnp.where(valid, r, jnp.inf), axis=-1, keepdims=True)
+    rmax = jnp.max(jnp.where(valid, r, -jnp.inf), axis=-1, keepdims=True)
+    scale = jnp.maximum(rmax - rmin, _EPS_SCALE)
+    q = jnp.clip(jnp.round((r - rmin) / scale * levels) / levels, 0.0, 1.0)
+    return q * scale + rmin
+
+
+def _simplex(z, valid):
+    """codecs._simplex with the padded lanes zeroed (so they neither
+    count in the row sum nor leak into the reduction)."""
+    z = jnp.where(valid, jnp.maximum(z, 0.0), 0.0)
+    return z / jnp.maximum(jnp.sum(z, axis=-1, keepdims=True), _EPS_SIMPLEX)
+
+
+def _fused_round_kernel(*refs, k_clients: int, n_valid: int,
+                        levels: float | None, mode: str, sharpen: bool):
+    it = iter(refs)
+    z_ref, w_ref = next(it), next(it)
+    base_ref = next(it) if mode == "delta" else None
+    beta_ref = next(it) if sharpen else None
+    o_ref = next(it)
+
+    z = z_ref[...].astype(jnp.float32)                   # (K, bm, Np)
+    lane = jax.lax.broadcasted_iota(jnp.int32, z.shape, 2)
+    valid = lane < n_valid
+
+    if mode == "delta":
+        b = base_ref[...].astype(jnp.float32)            # (bm, Np)
+        r = z - b[None]
+        res_valid = lane < (n_valid - 1)  # last class implied by sum-zero
+        if levels is not None:
+            r = _qdq(r, res_valid, levels)
+        r = jnp.where(res_valid, r, 0.0)
+        last = -jnp.sum(r, axis=-1, keepdims=True)
+        r = jnp.where(lane == n_valid - 1, last, r)
+        z = _simplex(b[None] + r, valid)
+    elif mode == "quant":
+        z = _simplex(_qdq(z, valid, levels), valid)
+    else:
+        z = jnp.where(valid, z, 0.0)
+
+    w = w_ref[...].astype(jnp.float32)                   # (K, 1)
+    zsum = jnp.sum(z * w[:, :, None], axis=0)            # (bm, Np)
+    if sharpen:
+        # identical to era_kernel._era_fused_kernel on the weighted stack
+        zbar = zsum / k_clients
+        beta = beta_ref[0]
+        logz = jnp.log(jnp.maximum(zbar, _EPS_ERA)) * beta
+        m = jnp.max(logz, axis=-1, keepdims=True)
+        e = jnp.exp(logz - m)
+        out = e / jnp.sum(e, axis=-1, keepdims=True)
+    else:
+        out = zsum
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _auto_block_m(m: int, k: int, n_padded: int, interpret: bool) -> int:
+    budget = _VMEM_BUDGET_INTERPRET if interpret else _VMEM_BUDGET_NATIVE
+    bm = align_block_rows(128, m)
+    while bm > 8 and k * bm * n_padded * 4 > budget:
+        bm = align_block_rows(bm // 2, m)
+    return bm
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bits", "sharpen",
+                                             "block_m", "interpret"))
+def fused_round(z_clients: jnp.ndarray, weights: jnp.ndarray, beta=None,
+                base: jnp.ndarray | None = None, *, mode: str = "identity",
+                bits: int | None = None, sharpen: bool = True,
+                block_m: int | None = None,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """Fused round hot path: (K, m, N) -> (m, N).
+
+    ``weights`` is the (K,) per-client reduction weight (see module
+    docs); ``base`` is the *resolved* delta base (``(m, N)``, required
+    for ``mode="delta"`` — use :func:`resolve_delta_base`).  ``beta`` is
+    required when ``sharpen=True``.  ``interpret=None`` auto-detects the
+    backend.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r} (want one of {MODES})")
+    if mode == "quant" and bits is None:
+        raise ValueError("mode='quant' requires bits")
+    if sharpen and beta is None:
+        raise ValueError("sharpen=True requires beta")
+    if mode == "delta" and base is None:
+        raise ValueError("mode='delta' requires a resolved base "
+                         "(resolve_delta_base)")
+    interpret = resolve_interpret(interpret)
+    K, M, N = z_clients.shape
+    n_pad = (-N) % 128
+    Np = N + n_pad
+    bm = (align_block_rows(block_m, M) if block_m is not None
+          else _auto_block_m(M, K, Np, interpret))
+    m_pad = (-M) % bm
+    z = jnp.pad(z_clients, ((0, 0), (0, m_pad), (0, n_pad)))
+    Mp = M + m_pad
+    w = jnp.reshape(weights.astype(jnp.float32), (K, 1))
+    levels = float(2 ** bits - 1) if bits is not None else None
+
+    operands = [z, w]
+    in_specs = [
+        pl.BlockSpec((K, bm, Np), lambda i: (0, i, 0)),
+        pl.BlockSpec((K, 1), lambda i: (0, 0)),
+    ]
+    if mode == "delta":
+        operands.append(jnp.pad(base.astype(jnp.float32),
+                                ((0, m_pad), (0, n_pad))))
+        in_specs.append(pl.BlockSpec((bm, Np), lambda i: (i, 0)))
+    if sharpen:
+        operands.append(jnp.asarray([beta], jnp.float32))
+        in_specs.append(_BETA_SPEC)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_round_kernel, k_clients=K, n_valid=N,
+                          levels=levels, mode=mode, sharpen=sharpen),
+        grid=(Mp // bm,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, Np), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), z_clients.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Engine-facing plumbing
+# ---------------------------------------------------------------------------
+
+def resolve_delta_base(base, present, m: int, n: int) -> jnp.ndarray:
+    """The delta base as ``CacheDeltaCodec._base`` resolves it: the
+    cached entry where one exists, the uniform prior elsewhere."""
+    if base is None:
+        return jnp.full((m, n), 1.0 / n, jnp.float32)
+    if present is not None:
+        base = jnp.where(present[..., None], base, 1.0 / n)
+    return base
+
+
+def codec_kernel_spec(codec) -> dict | None:
+    """Kernel parameters for an uplink codec, or ``None`` when the codec
+    has no fused equivalent (top-k, exotic compositions) and the per-op
+    path must run."""
+    from repro.compress.codecs import CacheDeltaCodec, IdentityCodec, QuantCodec
+
+    if isinstance(codec, IdentityCodec):
+        return {"mode": "identity", "bits": None}
+    if isinstance(codec, QuantCodec) and codec.renormalize:
+        return {"mode": "quant", "bits": codec.bits}
+    if isinstance(codec, CacheDeltaCodec):
+        if isinstance(codec.inner, IdentityCodec):
+            return {"mode": "delta", "bits": None}
+        if isinstance(codec.inner, QuantCodec) and not codec.inner.renormalize:
+            return {"mode": "delta", "bits": codec.inner.bits}
+    return None

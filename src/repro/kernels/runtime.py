@@ -6,12 +6,23 @@ semantics, traceable/jittable) everywhere else.  Kernel modules default
 ``interpret=None`` and resolve it here at trace time, so direct callers
 get the right mode for the backend they are actually on instead of
 silently running the interpreter on TPU.
+
+Also the single source of truth for row-block alignment: every kernel
+that tiles a flattened row axis must round its block size up to the f32
+sublane multiple (8) — a block like 10 interprets fine on CPU but
+mis-tiles on native TPU, which is exactly the class of bug interpret
+mode cannot catch.
 """
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
+
+# f32 sublane count: the second-to-last tile dim every f32 VMEM block
+# must be a multiple of (the lane dim is handled by 128-padding in the
+# wrappers).
+SUBLANES_F32 = 8
 
 
 def default_interpret() -> bool:
@@ -22,3 +33,15 @@ def default_interpret() -> bool:
 def resolve_interpret(interpret: Optional[bool]) -> bool:
     """Resolve an ``interpret`` kwarg: ``None`` -> backend detection."""
     return default_interpret() if interpret is None else bool(interpret)
+
+
+def align_block_rows(block_b: int, n_rows: int,
+                     align: int = SUBLANES_F32) -> int:
+    """Shrink a row-block size to the actual row count, rounded **up**
+    to the sublane multiple.
+
+    ``min(block_b, n_rows)`` alone produces illegal blocks (e.g. 10) for
+    odd row counts; the round-up keeps the block a valid f32 tile while
+    the wrappers' row padding covers the overhang.  Always >= ``align``.
+    """
+    return -(-max(align, min(block_b, n_rows)) // align) * align

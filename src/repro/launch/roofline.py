@@ -10,18 +10,56 @@ HLO text: we sum the max inline shape per all-gather / all-reduce /
 reduce-scatter / all-to-all / collective-permute instruction (the max of
 output/operand shapes printed on the line = bytes a participant moves).
 
-Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
-~50 GB/s/link ICI.
+Hardware peaks are a :class:`HardwareSpec` parameter (``HW_PRESETS``
+has the named chips); the default stays TPU v5e — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI — which the legacy module constants
+alias for back-compat.
 """
 from __future__ import annotations
 
 import re
 from dataclasses import asdict, dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
-PEAK_FLOPS = 197e12      # bf16 / chip
-HBM_BW = 819e9           # bytes/s / chip
-LINK_BW = 50e9           # bytes/s / link
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip peaks the roofline terms divide by."""
+    name: str
+    peak_flops: float        # FLOP/s / chip (dense bf16)
+    hbm_bw: float            # bytes/s / chip
+    link_bw: float           # bytes/s / link (ICI / host interconnect)
+
+
+HW_PRESETS: Dict[str, HardwareSpec] = {
+    "tpu_v5e": HardwareSpec("tpu_v5e", 197e12, 819e9, 50e9),
+    "tpu_v4": HardwareSpec("tpu_v4", 275e12, 1228e9, 100e9),
+    "tpu_v5p": HardwareSpec("tpu_v5p", 459e12, 2765e9, 100e9),
+    # CPU host numbers for dev-container dry runs: the absolute seconds
+    # are nonsense there, but the *ratios* (which term dominates) still
+    # rank program variants
+    "cpu_host": HardwareSpec("cpu_host", 1e12, 100e9, 25e9),
+}
+
+DEFAULT_HW = HW_PRESETS["tpu_v5e"]
+
+
+def resolve_hw(hw: Union[str, HardwareSpec, None]) -> HardwareSpec:
+    """A HardwareSpec from a preset name, a spec, or None (default)."""
+    if hw is None:
+        return DEFAULT_HW
+    if isinstance(hw, HardwareSpec):
+        return hw
+    if hw not in HW_PRESETS:
+        raise ValueError(f"unknown hardware preset {hw!r} "
+                         f"(want one of {sorted(HW_PRESETS)})")
+    return HW_PRESETS[hw]
+
+
+# legacy aliases: the pre-HardwareSpec module constants (TPU v5e peaks)
+PEAK_FLOPS = DEFAULT_HW.peak_flops
+HBM_BW = DEFAULT_HW.hbm_bw
+LINK_BW = DEFAULT_HW.link_bw
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -93,6 +131,7 @@ class Roofline:
     collective_by_kind_gb: Dict[str, float]
     residual_while_loops: int
     cost_analysis_gflops: float  # XLA's own (unreliable on CPU) number
+    hw: str = DEFAULT_HW.name    # HardwareSpec the rate terms divide by
 
     def as_dict(self):
         return asdict(self)
@@ -109,20 +148,22 @@ def compute_roofline(
     hlo_text: str,
     model_flops: float,
     bytes_per_device: float,
+    hw: Union[str, HardwareSpec, None] = None,
 ) -> Roofline:
     """All rate terms are per-device over per-chip peaks (the SPMD module
     is the per-device program); whole-fleet figures are x chips."""
     from repro.launch import hlo_analysis as ha
 
+    hw = resolve_hw(hw)
     summary = ha.analyze(hlo_text)
     flops_dev = summary.dot_flops
     # 'bytes accessed' from cost_analysis is per-device (elementwise +
     # fusion operands); reliable because layer scans are fully unrolled.
     bytes_dev = float(cost.get("bytes accessed", cost.get("bytes_accessed", 0.0)))
     coll_dev = summary.collective_bytes
-    compute_s = flops_dev / PEAK_FLOPS
-    memory_s = bytes_dev / HBM_BW
-    coll_s = coll_dev / LINK_BW
+    compute_s = flops_dev / hw.peak_flops
+    memory_s = bytes_dev / hw.hbm_bw
+    coll_s = coll_dev / hw.link_bw
     terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
     bottleneck = max(terms, key=terms.get)
     fleet_flops = flops_dev * chips
@@ -141,6 +182,7 @@ def compute_roofline(
         collective_by_kind_gb={k: v / 1e9 for k, v in summary.collective_by_kind.items() if v},
         residual_while_loops=summary.residual_while_loops,
         cost_analysis_gflops=float(cost.get("flops", 0.0)) / 1e9,
+        hw=hw.name,
     )
 
 
@@ -156,11 +198,13 @@ def compute_roofline_from_summary(
     xla_flops: float,
     model_flops: float,
     bytes_per_device: float,
+    hw: Union[str, HardwareSpec, None] = None,
 ) -> Roofline:
+    hw = resolve_hw(hw)
     flops_dev = summary.dot_flops
-    compute_s = flops_dev / PEAK_FLOPS
-    memory_s = bytes_accessed / HBM_BW
-    coll_s = summary.collective_bytes / LINK_BW
+    compute_s = flops_dev / hw.peak_flops
+    memory_s = bytes_accessed / hw.hbm_bw
+    coll_s = summary.collective_bytes / hw.link_bw
     terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
     bottleneck = max(terms, key=terms.get)
     fleet_flops = flops_dev * chips
@@ -179,6 +223,7 @@ def compute_roofline_from_summary(
         collective_by_kind_gb={k: v / 1e9 for k, v in summary.collective_by_kind.items() if v},
         residual_while_loops=summary.residual_while_loops,
         cost_analysis_gflops=xla_flops / 1e9,
+        hw=hw.name,
     )
 
 

@@ -202,6 +202,59 @@ def test_shard_engine_rejects_indivisible_cohorts():
 
 
 # ---------------------------------------------------------------------------
+# Fused round fast path (FLConfig.fused_round): the per-op conformance
+# matrix above stays untouched; these cells assert that turning the
+# fused kernel on changes NOTHING observable — ledgers byte-identical
+# to the per-op scan run (comm accounting is analytic, counts are
+# unaffected) and metrics/cache allclose (on CPU the interpreter runs
+# the identical f32 expression sequence, so they are in fact equal) —
+# across scarlet x {bernoulli, outage} x every fusable codec, on both
+# device engines.
+# ---------------------------------------------------------------------------
+
+FUSED_CODECS = ("identity", "quant8", "cache_delta", "cache_delta+quant8")
+FUSED_MATRIX = [(p, c) for p in ("bernoulli", "outage") for c in FUSED_CODECS]
+
+
+@pytest.mark.parametrize("participation,codec", FUSED_MATRIX,
+                         ids=["-".join(p) for p in FUSED_MATRIX])
+def test_fused_round_conformance_cell(participation, codec):
+    perop = _build(ScannedFederatedDistillation, "scarlet", participation,
+                   codec)
+    fused_cfg = dataclasses.replace(CFG, uplink_codec=codec, fused_round=True)
+
+    def build_fused(engine_cls):
+        eng = engine_cls(fused_cfg, STRATEGIES["scarlet"](beta=1.5),
+                         cache_duration=CACHE_D["scarlet"],
+                         scenario=PARTICIPATIONS[participation])
+        return eng, eng.run()
+
+    fused_scan = build_fused(ScannedFederatedDistillation)
+    fused_shard = build_fused(ShardedFederatedDistillation)
+    # fused vs per-op on the same engine: byte-identical ledger, and the
+    # one-quant-step cache band for lossy codecs (native-TPU headroom;
+    # interpret mode is exact)
+    cache_atol = 1e-5 if "quant" not in codec else 5e-3
+    assert_parity(*perop, *fused_scan, ledger="exact", cache_atol=cache_atol)
+    assert_parity(*fused_scan, *fused_shard, ledger="exact",
+                  cache_atol=cache_atol)
+
+
+def test_host_engine_ignores_fused_flag():
+    """The host loop is the per-op reference: FLConfig.fused_round must
+    not change its behavior (it has no fused path to take)."""
+    cfg = dataclasses.replace(CFG, uplink_codec="quant8")
+    on = FederatedDistillation(
+        dataclasses.replace(cfg, fused_round=True),
+        STRATEGIES["scarlet"](beta=1.5), cache_duration=3,
+        scenario=PARTICIPATIONS["bernoulli"], rng_backend="jax")
+    off = FederatedDistillation(
+        cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=3,
+        scenario=PARTICIPATIONS["bernoulli"], rng_backend="jax")
+    assert_parity(on, on.run(), off, off.run(), ledger="exact")
+
+
+# ---------------------------------------------------------------------------
 # Shard-engine specifics not covered by the matrix
 # ---------------------------------------------------------------------------
 

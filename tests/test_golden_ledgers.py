@@ -69,6 +69,21 @@ def test_golden_ledger(method, codec, request):
         "and commit the diff.")
 
 
+@pytest.mark.parametrize("codec", CODECS)
+def test_golden_ledger_fused_round_byte_identical(codec):
+    """The fused fast path must reproduce the committed per-op goldens
+    byte-for-byte: comm accounting is analytic in integer counts, so
+    fusing the compute hot path may not move a single byte.  No separate
+    fused fixtures exist on purpose — the per-op files are the contract."""
+    path = GOLDEN_DIR / f"scarlet-{codec}.json"
+    h = run_method(
+        "scarlet", CFG, engine="scan", codec=codec, fused_round=True,
+        scenario=Scenario(participation=bernoulli_participation(0.5)),
+        **METHOD_KW["scarlet"])
+    text = json.dumps(h.ledger.summary(), sort_keys=True, indent=2) + "\n"
+    assert path.read_text() == text
+
+
 def test_no_stale_golden_fixtures():
     """Every committed fixture corresponds to a live matrix cell, so a
     renamed case cannot leave an unchecked golden behind."""

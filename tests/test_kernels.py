@@ -48,6 +48,73 @@ def test_era_kernel_matches_core_impl():
 
 
 # ---------------------------------------------------------------------------
+# Row-block alignment (f32 sublane tiling)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_b,n_rows,want", [
+    (256, 10, 16),   # the regression shape: min() alone would give 10
+    (256, 8, 8),
+    (256, 1, 8),     # floor at one sublane group
+    (256, 17, 24),
+    (64, 1000, 64),  # block already legal and smaller than the input
+    (256, 256, 256),
+])
+def test_align_block_rows(block_b, n_rows, want):
+    from repro.kernels.runtime import align_block_rows
+
+    got = align_block_rows(block_b, n_rows)
+    assert got == want
+    assert got % 8 == 0
+
+
+@pytest.mark.parametrize("B", [1, 3, 10, 17, 250, 1001])
+def test_ops_era_passes_aligned_block_to_kernel(B, monkeypatch):
+    """Regression: ``ops.enhanced_era`` shrank block_b with a bare
+    ``min(block_b, rows)``, handing the kernel row blocks like 10 that
+    mis-tile on native TPU (f32 sublane = 8).  Interpret mode executes
+    them anyway, so assert on the block size actually passed down —
+    this test FAILS on the pre-fix wrapper for any B not a multiple
+    of 8."""
+    seen = {}
+    real = era_kernel.enhanced_era
+
+    def spy(z, beta, block_b=256, interpret=None):
+        seen["block_b"] = block_b
+        return real(z, beta, block_b=block_b, interpret=interpret)
+
+    monkeypatch.setattr(ops.era_kernel, "enhanced_era", spy)
+    z = _probs(KEY, (B, 10))
+    out = ops.enhanced_era(z, 1.5)
+    assert seen["block_b"] % 8 == 0, (
+        f"ops.enhanced_era passed an unaligned row block "
+        f"{seen['block_b']} for B={B}")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.enhanced_era(z, 1.5)),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("B", [1, 3, 10, 100])
+def test_era_fused_default_block_vs_small_B(B):
+    """The fused kernel's default block_b=128 must legally shrink to
+    small row counts (teacher batches are often << 128)."""
+    z = _probs(KEY, (5, B, 10))
+    out = era_kernel.enhanced_era_fused(z, 1.5)  # default block_b=128
+    exp = ref.enhanced_era_fused(z, 1.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("B", [9, 10, 33, 1001])
+def test_era_kernel_odd_row_counts(B):
+    """Odd row counts through the wrapper directly (the shapes whose
+    shrunk blocks were illegal pre-fix)."""
+    z = _probs(KEY, (B, 10))
+    out = era_kernel.enhanced_era(z, 2.0)  # default block_b=256 > B
+    exp = ref.enhanced_era(z, 2.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # Quantize-dequantize (soft-label codec round trip)
 # ---------------------------------------------------------------------------
 
@@ -69,6 +136,54 @@ def test_quant_kernel_lane_padding_does_not_corrupt_minmax():
     z = 0.5 + 0.4 * _probs(KEY, (16, 7))  # all entries well above 0
     out = np.asarray(quant_kernel.quantize_dequantize(z, 8))
     assert out.min() >= float(z.min()) - 1e-5
+
+
+def _assert_roundtrip_in_row_range(z, bits):
+    """The level clamp's invariant: every dequantized value stays inside
+    its row's [min, max] — degenerate rows (eps scale) included."""
+    out = np.asarray(quant_kernel.quantize_dequantize(jnp.asarray(z), bits),
+                     np.float64)
+    zn = np.asarray(z, np.float64)
+    lo = zn.min(axis=-1, keepdims=True)
+    hi = zn.max(axis=-1, keepdims=True)
+    assert np.isfinite(out).all()
+    assert (out >= lo - 1e-6).all() and (out <= hi + 1e-6).all()
+
+
+def test_quant_kernel_all_equal_rows():
+    """Constant rows collapse the range to the eps floor; the round trip
+    must return the constant, not a value scaled off the eps."""
+    z = jnp.full((12, 10), 0.1, jnp.float32)
+    out = np.asarray(quant_kernel.quantize_dequantize(z, 8))
+    np.testing.assert_allclose(out, np.asarray(z), atol=1e-7)
+    _assert_roundtrip_in_row_range(z, 8)
+
+
+def test_quant_kernel_one_bit():
+    """bits=1 is the coarsest wire (two levels: row min and row max)."""
+    z = _probs(KEY, (32, 10))
+    out = np.asarray(quant_kernel.quantize_dequantize(z, 1))
+    exp = np.asarray(ref.quantize_dequantize(z, 1))
+    np.testing.assert_allclose(out, exp, rtol=1e-6, atol=1e-6)
+    _assert_roundtrip_in_row_range(z, 1)
+
+
+def test_quant_kernel_single_class():
+    """N=1: zero range per row; the round trip must be the identity."""
+    z = jnp.linspace(0.1, 0.9, 16).reshape(16, 1).astype(jnp.float32)
+    out = np.asarray(quant_kernel.quantize_dequantize(z, 8))
+    np.testing.assert_allclose(out, np.asarray(z), atol=1e-7)
+
+
+@pytest.mark.parametrize("B", [5, 13, 100])
+def test_quant_kernel_rows_not_multiple_of_block(B):
+    """Row counts that don't divide the block exercise both the row
+    padding and the (aligned) shrunk block."""
+    z = _probs(KEY, (B, 10))
+    out = np.asarray(quant_kernel.quantize_dequantize(z, 8, block_b=64))
+    exp = np.asarray(ref.quantize_dequantize(z, 8))
+    np.testing.assert_allclose(out, exp, rtol=1e-6, atol=1e-6)
+    _assert_roundtrip_in_row_range(z, 8)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,107 @@
+"""Unit tests for the CI perf-regression gate (``benchmarks.perf_gate``):
+the gate must fail on a simulated regression and stay quiet inside the
+tolerance band."""
+import copy
+import json
+import os
+
+import pytest
+
+from benchmarks import perf_gate
+
+ENV = {"backend": "cpu", "device_kind": "cpu", "device_count": 8,
+       "jax": "x", "python": "x", "machine": "x"}
+
+
+def _doc(rows):
+    return {"bench": "engine", "schema": 1, "quick": True, "env": dict(ENV),
+            "rows": rows}
+
+
+BASE = _doc([
+    {"name": "engine_scan_perop_K200", "us_per_call": 10_000.0,
+     "rounds_per_sec": 100.0, "derived": ""},
+    {"name": "engine_scan_fused_K200", "us_per_call": 5_000.0,
+     "rounds_per_sec": 200.0, "speedup": 2.0, "derived": ""},
+])
+
+
+def test_identical_docs_pass():
+    assert perf_gate.gate_docs(BASE, copy.deepcopy(BASE)) == []
+
+
+def test_within_band_passes():
+    cur = copy.deepcopy(BASE)
+    cur["rows"][0]["us_per_call"] = 10_000.0 * 1.5  # inside 1+ratio_tol
+    cur["rows"][1]["speedup"] = 2.0 * 0.6           # above 1-ratio_tol floor
+    assert perf_gate.gate_docs(BASE, cur, ratio_tol=0.75,
+                               abs_tol_us=0.0) == []
+
+
+def test_simulated_time_regression_fails():
+    cur = copy.deepcopy(BASE)
+    cur["rows"][1]["us_per_call"] = 50_000.0  # 10x slower
+    fails = perf_gate.gate_docs(BASE, cur)
+    assert any("us_per_call regressed" in f and "fused" in f for f in fails)
+
+
+def test_simulated_speedup_loss_fails():
+    """The fused path silently losing its advantage (speedup 2.0 -> 0.3)
+    must trip the gate even if absolute times stay within the band."""
+    cur = copy.deepcopy(BASE)
+    cur["rows"][1]["speedup"] = 0.3
+    cur["rows"][1]["rounds_per_sec"] = 30.0
+    fails = perf_gate.gate_docs(BASE, cur)
+    assert any("speedup regressed" in f for f in fails)
+    assert any("rounds_per_sec regressed" in f for f in fails)
+
+
+def test_missing_row_fails():
+    cur = copy.deepcopy(BASE)
+    cur["rows"] = cur["rows"][:1]
+    fails = perf_gate.gate_docs(BASE, cur)
+    assert any("missing from current run" in f for f in fails)
+
+
+def test_new_rows_allowed():
+    cur = copy.deepcopy(BASE)
+    cur["rows"].append({"name": "engine_new_case", "us_per_call": 1e9})
+    assert perf_gate.gate_docs(BASE, cur) == []
+
+
+def test_env_mismatch_fails():
+    cur = copy.deepcopy(BASE)
+    cur["env"]["backend"] = "tpu"
+    fails = perf_gate.gate_docs(BASE, cur)
+    assert any("env mismatch" in f for f in fails)
+
+
+def test_abs_floor_absorbs_micro_noise():
+    """Microsecond-scale rows: a 3x blip on a 20us row is scheduler
+    noise, absorbed by the additive floor."""
+    base = _doc([{"name": "tiny", "us_per_call": 20.0}])
+    cur = _doc([{"name": "tiny", "us_per_call": 60.0}])
+    assert perf_gate.gate_docs(base, cur, ratio_tol=0.5, abs_tol_us=500.0) == []
+    fails = perf_gate.gate_docs(base, cur, ratio_tol=0.5, abs_tol_us=0.0)
+    assert fails  # without the floor it would (correctly) trip
+
+
+def test_gate_dirs_roundtrip(tmp_path):
+    bdir, cdir = tmp_path / "base", tmp_path / "cur"
+    bdir.mkdir(), cdir.mkdir()
+    (bdir / "BENCH_engine.json").write_text(json.dumps(BASE))
+    # missing current file fails
+    fails = perf_gate.gate_dirs(str(bdir), str(cdir))
+    assert any("missing from current dir" in f for f in fails)
+    (cdir / "BENCH_engine.json").write_text(json.dumps(BASE))
+    assert perf_gate.gate_dirs(str(bdir), str(cdir)) == []
+    # regression through the file path too
+    bad = copy.deepcopy(BASE)
+    bad["rows"][0]["us_per_call"] = 1e9
+    (cdir / "BENCH_engine.json").write_text(json.dumps(bad))
+    assert perf_gate.gate_dirs(str(bdir), str(cdir))
+
+
+def test_empty_baseline_dir_fails(tmp_path):
+    fails = perf_gate.gate_dirs(str(tmp_path), str(tmp_path))
+    assert any("no BENCH" in f for f in fails)

@@ -1,0 +1,117 @@
+"""Unit tests for the roofline hardware model and the HLO collective
+byte parser (``repro.launch.roofline``)."""
+import pytest
+
+from repro.launch import roofline as rl
+from repro.launch.hlo_analysis import HloSummary
+
+
+# ---------------------------------------------------------------------------
+# collective_bytes HLO line parsing
+# ---------------------------------------------------------------------------
+
+def test_collective_bytes_async_start_counted_once():
+    """Async collectives appear as ``-start`` / ``-done`` pairs; only the
+    ``-start`` line carries the opcode match — the ``-done`` wrapper must
+    not double-count the transfer."""
+    hlo = """
+  ar-start = f32[8,32]{1,0} all-reduce-start(f32[8,32]{1,0} p0), to_apply=add
+  ar-done = f32[8,32]{1,0} all-reduce-done(f32[8,32]{1,0} ar-start)
+"""
+    total, by_kind, counts = rl.collective_bytes(hlo)
+    assert counts["all-reduce"] == 1
+    assert total == pytest.approx(8 * 32 * 4)
+
+
+def test_collective_bytes_fusion_names_not_miscounted():
+    """Instruction *names* containing a collective substring (fusion
+    names, computation labels) must not match — only the opcode on the
+    right-hand side does."""
+    hlo = """
+  fused_all-reduce.1 = f32[64]{0} fusion(f32[64]{0} p0), kind=kLoop, calls=c1
+  all-gather.clone = f32[16,4]{1,0} add(f32[16,4]{1,0} a, f32[16,4]{1,0} b)
+  real = f32[16]{0} all-gather(f32[4]{0} p1), dimensions={0}
+"""
+    total, by_kind, counts = rl.collective_bytes(hlo)
+    assert counts["all-reduce"] == 0
+    assert counts["all-gather"] == 1
+    assert total == pytest.approx(16 * 4)  # max shape on the real line
+
+
+def test_collective_bytes_scalar_shape():
+    """Scalar ``f32[]`` shapes (e.g. a psum'd scalar count) parse as one
+    element, not zero."""
+    hlo = "  r = f32[] all-reduce(f32[] p0), to_apply=add\n"
+    total, by_kind, counts = rl.collective_bytes(hlo)
+    assert counts["all-reduce"] == 1
+    assert total == pytest.approx(4)
+
+
+def test_collective_bytes_ignores_non_collectives():
+    hlo = """
+  d = f32[128,128]{1,0} dot(f32[128,64]{1,0} a, f32[64,128]{1,0} b)
+  e = f32[128]{0} add(f32[128]{0} x, f32[128]{0} y)
+"""
+    total, _, counts = rl.collective_bytes(hlo)
+    assert total == 0 and sum(counts.values()) == 0
+
+
+# ---------------------------------------------------------------------------
+# HardwareSpec presets + threading
+# ---------------------------------------------------------------------------
+
+def test_presets_and_resolve():
+    assert rl.resolve_hw(None) is rl.DEFAULT_HW
+    assert rl.resolve_hw("tpu_v4").peak_flops == pytest.approx(275e12)
+    spec = rl.HardwareSpec("custom", 1e12, 1e11, 1e10)
+    assert rl.resolve_hw(spec) is spec
+    with pytest.raises(ValueError, match="unknown hardware preset"):
+        rl.resolve_hw("gpu_h100")
+
+
+def test_legacy_constants_alias_default_hw():
+    """Pre-HardwareSpec callers read module constants; they must stay
+    the v5e defaults."""
+    assert rl.PEAK_FLOPS == rl.HW_PRESETS["tpu_v5e"].peak_flops
+    assert rl.HBM_BW == rl.HW_PRESETS["tpu_v5e"].hbm_bw
+    assert rl.LINK_BW == rl.HW_PRESETS["tpu_v5e"].link_bw
+
+
+def _summary(**kw):
+    base = dict(dot_flops=0.0, transcendental_elems=0, collective_bytes=0.0,
+                collective_by_kind={}, collective_counts={},
+                residual_while_loops=0)
+    base.update(kw)
+    return HloSummary(**base)
+
+
+def test_hw_threads_through_roofline_terms():
+    """The same program must produce hardware-dependent rate terms (the
+    hard-coded v5e peaks were the bug)."""
+    s = _summary(dot_flops=275e12, collective_bytes=100e9)
+    common = dict(arch="x", shape="s", mesh_name="m", scheme="tp", chips=1,
+                  summary=s, bytes_accessed=819e9, xla_flops=0.0,
+                  model_flops=0.0, bytes_per_device=0.0)
+    v5e = rl.compute_roofline_from_summary(**common)  # default hw
+    v4 = rl.compute_roofline_from_summary(**common, hw="tpu_v4")
+    assert v5e.hw == "tpu_v5e" and v4.hw == "tpu_v4"
+    assert v4.compute_s == pytest.approx(1.0)                      # 275/275
+    assert v5e.compute_s == pytest.approx(275.0 / 197.0, rel=1e-6)
+    assert v5e.memory_s == pytest.approx(1.0)                      # 819/819
+    assert v4.collective_s == pytest.approx(1.0)                   # 100/100
+    assert v5e.collective_s == pytest.approx(2.0)                  # 100/50
+
+
+def test_hw_changes_bottleneck_verdict():
+    """A memory-vs-collective tie on one chip flips on another — the
+    whole point of parameterizing the peaks."""
+    # v5e (819 GB/s HBM, 50 GB/s link): memory term wins;
+    # v5p (2765 GB/s HBM, 100 GB/s link): HBM got 3.4x faster but the
+    # link only 2x, so the same program becomes collective-bound
+    s = _summary(collective_bytes=50e9)
+    common = dict(arch="x", shape="s", mesh_name="m", scheme="tp", chips=1,
+                  summary=s, bytes_accessed=1000e9, xla_flops=0.0,
+                  model_flops=0.0, bytes_per_device=0.0)
+    assert rl.compute_roofline_from_summary(**common).bottleneck == "memory"
+    assert rl.compute_roofline_from_summary(
+        **common, hw="tpu_v5p").bottleneck == "collective"
