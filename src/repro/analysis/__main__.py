@@ -1,0 +1,140 @@
+"""CLI: ``python -m repro.analysis [--strict] [--fast] [--selftest]``.
+
+Runs the three static passes over the real registries and prints a
+structured report.  Exit code: nonzero on any error; ``--strict`` also
+fails on warnings.  ``--selftest`` instead runs the passes over the
+deliberately broken fixtures and fails unless every one is flagged at
+its expected level.
+
+Everything is trace-only (``jax.make_jaxpr`` on abstract shapes): no
+kernels execute, no training runs.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _ensure_devices(n: int = 8) -> None:
+    """The replication pass builds a 2x4 test mesh; give the CPU backend
+    enough host devices BEFORE jax initializes (same flag the test
+    suite's conftest forces)."""
+    flag = f"--xla_force_host_platform_device_count={n}"
+    prev = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in prev:
+        os.environ["XLA_FLAGS"] = (prev + " " + flag).strip()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract analyzer (trace-time proofs)")
+    ap.add_argument("--strict", action="store_true",
+                    help="warnings also fail the build")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the engine-construction replication pass "
+                         "(jaxpr + pallas only; suits tier-1 CI)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the passes over the broken fixtures and "
+                         "verify each is flagged")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the structured report as JSON")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="include ok/info findings in the printed report")
+    args = ap.parse_args(argv)
+
+    _ensure_devices()
+    # imports AFTER the device flag: repro.analysis.__init__ is jax-free
+    from repro.analysis.report import Report
+
+    report = Report()
+    if args.selftest:
+        rc = _selftest(report, fast=args.fast)
+        print(report.render(verbose=True))
+        if args.json:
+            _dump(report, args.json)
+        return rc
+
+    from repro.analysis import jaxpr_checks, pallas_checks
+
+    report.extend(jaxpr_checks.run())
+    report.extend(pallas_checks.run())
+    if not args.fast:
+        from repro.analysis import replication_checks
+        report.extend(replication_checks.run())
+    print(report.render(verbose=args.verbose))
+    if args.json:
+        _dump(report, args.json)
+    return report.exit_code(strict=args.strict)
+
+
+def _dump(report, path: str) -> None:
+    with open(path, "w") as f:
+        f.write(report.to_json())
+
+
+def _selftest(report, fast: bool = False) -> int:
+    """Every broken fixture must be flagged at its expected level."""
+    from repro.analysis import fixtures, jaxpr_checks, pallas_checks
+    from repro.analysis.report import Report
+
+    failures = []
+
+    # strategies: each must yield >= 1 finding at the expected level
+    for name, ctor in fixtures.BROKEN_STRATEGIES.items():
+        want = fixtures.EXPECTED_STRATEGY_LEVEL[name]
+        got = jaxpr_checks.check_strategy(name, ctor)
+        hit = [f for f in got if f.level == want]
+        if hit:
+            report.add("ok", "selftest", name,
+                       f"flagged as expected ({want}): {hit[0].message}")
+        else:
+            failures.append(name)
+            report.add("error", "selftest", name,
+                       f"NOT flagged at level {want!r} "
+                       f"(got {[f.level for f in got]})")
+
+    # pallas fixtures
+    for label, fn, fargs, want in fixtures.broken_kernel_cases():
+        got = pallas_checks.check_case(label, fn, fargs)
+        hit = [f for f in got if f.level == want]
+        if hit:
+            report.add("ok", "selftest", label,
+                       f"flagged as expected ({want}): {hit[0].message}")
+        else:
+            failures.append(label)
+            report.add("error", "selftest", label,
+                       f"NOT flagged at level {want!r} "
+                       f"(got {[f.level for f in got]})")
+
+    # replication fixtures (skipped under --fast: needs the 8-device mesh)
+    if not fast:
+        from repro.analysis import replication_checks
+        broken = Report()
+        broken.extend(replication_checks.check_shard_map_fn(
+            *fixtures.broken_carry_fn(), subject_prefix="fixture-broken:"))
+        if broken.errors:
+            report.add("ok", "selftest", "fixture/broken-carry",
+                       f"flagged as expected: {broken.errors[0].message}")
+        else:
+            failures.append("fixture/broken-carry")
+            report.add("error", "selftest", "fixture/broken-carry",
+                       "axis_index-tainted replicated carry NOT flagged")
+        fixed = Report()
+        fixed.extend(replication_checks.check_shard_map_fn(
+            *fixtures.fixed_carry_fn(), subject_prefix="fixture-fixed:"))
+        if fixed.errors:
+            failures.append("fixture/fixed-carry")
+            report.add("error", "selftest", "fixture/fixed-carry",
+                       "psum-cleaned carry falsely flagged: "
+                       + fixed.errors[0].message)
+        else:
+            report.add("ok", "selftest", "fixture/fixed-carry",
+                       "psum-cleaned twin passes (no false positive)")
+
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

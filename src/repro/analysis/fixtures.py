@@ -1,0 +1,214 @@
+"""Deliberately broken components for analyzer self-tests.
+
+Never registered anywhere — these exist so ``python -m repro.analysis
+--selftest`` (and ``tests/test_analysis.py``) can prove each pass
+actually fires: a silent analyzer that flags nothing is
+indistinguishable from a working one on a healthy repo.
+
+One fixture per bug class the analyzer exists to catch:
+
+- :class:`CallbackSmugglerStrategy` — claims ``scan_safe`` with a host
+  callback in the aggregation graph;
+- :class:`HostRNGStrategy` — claims ``scan_safe`` while constructing a
+  host numpy Generator mid-trace (invisible in the jaxpr: only the
+  constructor spy catches it);
+- :class:`StaleFlagStrategy` — pure jnp but declares
+  ``scan_safe=False`` (the stale-conservative-flag warning);
+- :class:`FalseFusedStrategy` — advertises ``supports_fused_round``
+  without implementing the fused hooks;
+- :func:`broken_kernel_cases` — Pallas entry points with a misaligned
+  row block, a scalar parameter in VMEM, and a VMEM-overflowing block;
+- :func:`broken_carry_fn` / :func:`fixed_carry_fn` — a shard_map whose
+  replicated-carry claim is violated by ``axis_index`` taint (the PR 5
+  ``last_sync`` bug, distilled) and its repaired twin.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.sharding import PartitionSpec as P
+
+from repro.fl.strategies.base import Strategy
+
+
+class CallbackSmugglerStrategy(Strategy):
+    name = "fixture_callback_smuggler"
+    scan_safe = True  # LIE: aggregate_masked escapes to the host
+
+    def aggregate(self, z, um, t):
+        return jnp.mean(z, axis=0), None
+
+    def aggregate_masked(self, z, part, um, t):
+        out = jax.ShapeDtypeStruct(z.shape[1:], z.dtype)
+        return jax.pure_callback(
+            lambda zz: np.mean(zz, axis=0).astype(zz.dtype), out, z)
+
+
+class HostRNGStrategy(Strategy):
+    name = "fixture_host_rng"
+    scan_safe = True  # LIE: transmit draws from host numpy RNG
+
+    def transmit(self, z, key=None):
+        # numpy array + tracer broadcasts fine, so the TRACE SUCCEEDS
+        # and the jaxpr looks pure — the draw is baked in as a constant
+        # and every scan iteration reuses it (wrong), which only the
+        # constructor spy can see statically.
+        noise = np.random.default_rng(0).normal(0.0, 1e-3, (1,))
+        return z + jnp.float32(noise[0])
+
+    def aggregate(self, z, um, t):
+        return jnp.mean(z, axis=0), None
+
+
+class StaleFlagStrategy(Strategy):
+    name = "fixture_stale_flag"
+    scan_safe = False  # stale: everything below is pure traceable jnp
+
+    def aggregate(self, z, um, t):
+        return jnp.mean(z, axis=0), None
+
+
+class FalseFusedStrategy(Strategy):
+    name = "fixture_false_fused"
+    scan_safe = True
+    supports_fused_round = True  # LIE: fused hooks are not implemented
+
+    def aggregate(self, z, um, t):
+        return jnp.mean(z, axis=0), None
+
+
+BROKEN_STRATEGIES = {
+    "fixture_callback_smuggler": CallbackSmugglerStrategy,
+    "fixture_host_rng": HostRNGStrategy,
+    "fixture_stale_flag": StaleFlagStrategy,
+    "fixture_false_fused": FalseFusedStrategy,
+}
+
+# level the jaxpr pass must emit for each broken strategy
+EXPECTED_STRATEGY_LEVEL = {
+    "fixture_callback_smuggler": "error",
+    "fixture_host_rng": "error",
+    "fixture_stale_flag": "warn",
+    "fixture_false_fused": "error",
+}
+
+
+# ---------------------------------------------------------------------------
+# Pallas fixtures
+# ---------------------------------------------------------------------------
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _scale_kernel(x_ref, s_ref, o_ref):
+    o_ref[...] = x_ref[...] * s_ref[0]
+
+
+def _misaligned(x):
+    # 10-row blocks over f32: interprets fine, mis-tiles natively
+    return pl.pallas_call(
+        _copy_kernel, grid=(10,),
+        in_specs=[pl.BlockSpec((10, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((10, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((100, 128), jnp.float32),
+        interpret=False)(x)
+
+
+def _vmem_scalar(x, s):
+    # the scalar rides in VMEM instead of SMEM
+    return pl.pallas_call(
+        _scale_kernel, grid=(2,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((16, 128), jnp.float32),
+        interpret=False)(x, s)
+
+
+def _vmem_hog(x):
+    # 16 MiB in + 16 MiB out per block: cannot fit a core's VMEM
+    return pl.pallas_call(
+        _copy_kernel, grid=(1,),
+        in_specs=[pl.BlockSpec((4096, 1024), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((4096, 1024), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((4096, 1024), jnp.float32),
+        interpret=False)(x)
+
+
+def broken_kernel_cases():
+    """(label, fn, abstract args, expected level) for the Pallas lint."""
+    S, f32 = jax.ShapeDtypeStruct, jnp.float32
+    return [
+        ("fixture/misaligned-rows", _misaligned,
+         (S((100, 128), f32),), "error"),
+        ("fixture/scalar-in-vmem", _vmem_scalar,
+         (S((16, 128), f32), S((1,), f32)), "error"),
+        ("fixture/vmem-hog", _vmem_hog,
+         (S((4096, 1024), f32),), "error"),
+    ]
+
+
+def analysis_cases():
+    """Same triples without the expectation, matching the kernel-module
+    protocol so the fixture file can be linted like a real module."""
+    return [(label, fn, args) for label, fn, args, _ in broken_kernel_cases()]
+
+
+# ---------------------------------------------------------------------------
+# Replication fixtures
+# ---------------------------------------------------------------------------
+
+def _shard_map():
+    try:
+        from jax import shard_map as f
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as f
+    return f
+
+
+def _fixture_mesh():
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh(2, 4)
+
+
+def broken_carry_fn():
+    """The PR 5 ``last_sync`` bug, distilled: a carry leaf declared
+    replicated (out_specs P()) whose update is keyed on the shard-local
+    participation slice — shards disagree after one round."""
+    mesh = _fixture_mesh()
+
+    def body(last_sync, t):
+        six = jax.lax.axis_index("data")
+        kloc = last_sync.shape[0]
+        part_local = (jnp.arange(kloc) + t + six) % 2 > 0  # shard-varying
+        return jnp.where(part_local, t, last_sync)
+
+    fn = _shard_map()(body, mesh=mesh, in_specs=(P(), P()),
+                      out_specs=P(), check_rep=False)
+    abstract = (jax.ShapeDtypeStruct((8,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+    return fn, abstract
+
+
+def fixed_carry_fn():
+    """The repaired twin: the shard-varying signal is psum'd over the
+    mesh before touching the replicated carry."""
+    mesh = _fixture_mesh()
+
+    def body(last_sync, t):
+        six = jax.lax.axis_index("data")
+        kloc = last_sync.shape[0]
+        part_local = (jnp.arange(kloc) + t + six) % 2 > 0
+        # reduce to a replicated global view before the carry update
+        part_global = jax.lax.psum(
+            part_local.astype(jnp.int32), ("data", "model")) > 0
+        return jnp.where(part_global, t, last_sync)
+
+    fn = _shard_map()(body, mesh=mesh, in_specs=(P(), P()),
+                      out_specs=P(), check_rep=False)
+    abstract = (jax.ShapeDtypeStruct((8,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+    return fn, abstract

@@ -1,0 +1,312 @@
+"""Pass 1: strategy and codec contracts, proved by abstract tracing.
+
+Every registered strategy declares flags the engines trust blindly at
+construction time (``scan_safe``, ``supports_fused_round``); every
+codec declares ``scan_safe`` and may advertise a fused-kernel
+equivalent via ``round_kernel.codec_kernel_spec``.  This pass traces
+the actual hooks on ``ShapeDtypeStruct`` inputs and diffs reality
+against the declarations:
+
+- ``scan_safe=True`` demands: every scanned hook traces on abstract
+  shapes (no host round trips / data-dependent python), the graph has
+  no host-callback primitives, and no host numpy RNG is constructed
+  mid-trace.  A violation is an **error** — the flag would crash (or
+  silently constant-fold) inside ``lax.scan``.
+- ``scan_safe=False`` on a strategy whose hooks all trace clean is a
+  **warn** — a stale conservative flag that locks the strategy out of
+  the scanned engines for no reason.
+- ``supports_fused_round=True`` demands the fused hooks trace for the
+  kernel-supported codec modes and actually hit a ``pallas_call``.
+- a codec with a non-None kernel spec must be expressible by
+  ``round_kernel.fused_round`` under that spec.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.report import Finding
+from repro.analysis.traceutil import find_eqns, trace
+
+# Abstract shapes for the trace: small but non-degenerate (K clients,
+# m public samples per round, N classes).  Values never materialize.
+_K, _M, _N = 8, 16, 10
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _strategy_args():
+    z = _sds((_K, _M, _N))
+    part = _sds((_K,))
+    key = _sds((2,), jnp.uint32)   # legacy PRNGKey layout, as the engines pass
+    t = _sds((), jnp.int32)
+    return z, part, key, t
+
+
+def _upload_mask_struct(s, z):
+    """Abstract upload_mask output (None for strategies without one)."""
+    return jax.eval_shape(lambda zz: s.upload_mask(zz), z)
+
+
+def _scan_hooks(s, um):
+    """(hook name, fn, args) for everything the scanned engines trace."""
+    z, part, key, t = _strategy_args()
+    hooks = [
+        ("transmit", lambda z_, k_: s.transmit(z_, k_), (z, key)),
+        ("upload_mask", lambda z_: s.upload_mask(z_), (z,)),
+        ("aggregate_masked",
+         lambda z_, p_, u_, t_: s.aggregate_masked(z_, p_, u_, t_),
+         (z, part, um, t)),
+        ("two_phase",
+         lambda z_, p_, u_, t_: s.finalize_aggregate(
+             s.partial_aggregate(z_, p_, u_, t_), t_),
+         (z, part, um, t)),
+    ]
+    if um is None:
+        # jax.make_jaxpr can't take None positionally; close over it
+        hooks[2] = ("aggregate_masked",
+                    lambda z_, p_, t_: s.aggregate_masked(z_, p_, None, t_),
+                    (z, part, t))
+        hooks[3] = ("two_phase",
+                    lambda z_, p_, t_: s.finalize_aggregate(
+                        s.partial_aggregate(z_, p_, None, t_), t_),
+                    (z, part, t))
+    return hooks
+
+
+# codec modes the fused round kernel supports, in codec_kernel_spec form
+_FUSED_SPECS = (
+    {"mode": "identity", "bits": None},
+    {"mode": "quant", "bits": 8},
+    {"mode": "delta", "bits": 8},
+)
+
+
+def check_strategy(name: str, ctor) -> List[Finding]:
+    """All contract findings for one registered strategy class."""
+    findings: List[Finding] = []
+    variants = tuple(getattr(ctor, "analysis_variants", ({},)))
+    for kw in variants:
+        subject = f"strategy:{name}" + (f"{kw!r}" if kw else "")
+        try:
+            s = ctor(**dict(kw))
+        except Exception as e:  # noqa: BLE001
+            findings.append(Finding(
+                "error", "jaxpr", subject,
+                f"analysis_variants kwargs rejected by constructor: {e}"))
+            continue
+        findings.extend(_check_instance(subject, s))
+    return findings
+
+
+def _check_instance(subject, s) -> List[Finding]:
+    findings: List[Finding] = []
+    z, part, key, t = _strategy_args()
+    contract = s.declared_contract()
+
+    try:
+        um = _upload_mask_struct(s, z)
+    except Exception as e:  # noqa: BLE001
+        findings.append(Finding("error", "jaxpr", subject,
+                                f"upload_mask failed abstract eval: {e}"))
+        um = None
+
+    # --- scan-safety -------------------------------------------------
+    violations = []
+    shape_probs = []
+    for hook, fn, args in _scan_hooks(s, um):
+        tr = trace(fn, *args)
+        for v in tr.scan_safety_violations():
+            violations.append(f"{hook}: {v}")
+        if tr.ok and hook in ("aggregate_masked", "two_phase"):
+            out = tr.jaxpr.out_avals[0]
+            if tuple(out.shape) != (_M, _N):
+                shape_probs.append(
+                    f"{hook}: teacher shape {tuple(out.shape)} != {(_M, _N)}")
+    findings.extend(Finding("error", "jaxpr", subject, p)
+                    for p in shape_probs)
+
+    if contract["scan_safe"]:
+        if violations:
+            for v in violations:
+                findings.append(Finding(
+                    "error", "jaxpr", subject,
+                    f"declared scan_safe=True but {v}"))
+        else:
+            findings.append(Finding("ok", "jaxpr", subject,
+                                    "scan_safe=True verified by trace"))
+    else:
+        # a declared-unsafe strategy should have *something* unsafe:
+        # check the scanned hooks above plus the dynamic-subset
+        # ``aggregate`` (where e.g. COMET's host k-means lives)
+        agg = trace(lambda z_, t_: s.aggregate(z_, None, t_), z, t)
+        agg_viol = agg.scan_safety_violations()
+        if not agg_viol and agg.ok:
+            # per-client second output is scan-hostile too (dynamic K)
+            per_client = agg.jaxpr.out_avals[1:] if len(
+                agg.jaxpr.out_avals) > 1 else []
+            if any(a.shape and a.shape[0] == _K for a in per_client):
+                agg_viol = ["aggregate returns per-client teachers "
+                            "(K-leading output, not scannable as-is)"]
+        if violations or agg_viol:
+            findings.append(Finding(
+                "ok", "jaxpr", subject,
+                "scan_safe=False justified: "
+                + "; ".join((violations + agg_viol)[:2])))
+        else:
+            findings.append(Finding(
+                "warn", "jaxpr", subject,
+                "declared scan_safe=False but every hook traces clean on "
+                "abstract shapes — stale flag? (locks the strategy out of "
+                "the scanned engines)"))
+
+    # --- fused round -------------------------------------------------
+    declared_fused = contract["supports_fused_round"]
+    fused_ok, fused_errs = _trace_fused(s, z, part, t)
+    if declared_fused:
+        if fused_errs:
+            for msg in fused_errs:
+                findings.append(Finding(
+                    "error", "jaxpr", subject,
+                    f"declared supports_fused_round=True but {msg}"))
+        else:
+            findings.append(Finding(
+                "ok", "jaxpr", subject,
+                "supports_fused_round=True verified (fused hooks trace to "
+                "pallas_call for all kernel codec modes)"))
+    elif fused_ok:
+        findings.append(Finding(
+            "info", "jaxpr", subject,
+            "supports_fused_round=False but the fused hooks trace clean — "
+            "consider advertising the fast path"))
+    return findings
+
+
+def _trace_fused(s, z, part, t):
+    """(all_modes_trace_to_pallas, error messages) for the fused hooks."""
+    errs = []
+    any_ok = False
+    for spec in _FUSED_SPECS:
+        base = _sds((_M, _N)) if spec["mode"] == "delta" else None
+        for hook in ("aggregate_masked_fused", "partial_aggregate_fused"):
+            fn = getattr(s, hook)
+            if base is None:
+                tr = trace(lambda z_, p_, t_: fn(z_, p_, spec, None, t_),
+                           z, part, t)
+            else:
+                tr = trace(lambda z_, p_, b_, t_: fn(z_, p_, spec, b_, t_),
+                           z, part, base, t)
+            if not tr.ok:
+                errs.append(f"{hook}[{spec['mode']}] failed to trace: "
+                            f"{type(tr.error).__name__}")
+                continue
+            if not find_eqns(tr.jaxpr.jaxpr, "pallas_call"):
+                errs.append(f"{hook}[{spec['mode']}] traces but contains no "
+                            "pallas_call — not actually fused")
+                continue
+            any_ok = True
+    return any_ok and not errs, errs
+
+
+def check_codec(name: str, factory) -> List[Finding]:
+    """Contract findings for one registered codec."""
+    from repro.kernels.round_kernel import MODES, codec_kernel_spec, fused_round
+
+    findings: List[Finding] = []
+    subject = f"codec:{name}"
+    try:
+        codec = factory()
+    except Exception as e:  # noqa: BLE001
+        return [Finding("error", "jaxpr", subject,
+                        f"factory failed: {e}")]
+
+    z = _sds((_M, _N))
+    base = _sds((_M, _N))
+    present = _sds((_M,), jnp.bool_)
+
+    viol = []
+    for hook, fn, args in (
+            ("encode", lambda z_: codec.encode(z_), (z,)),
+            ("decode(encode)", lambda z_: codec.decode(codec.encode(z_)), (z,)),
+            ("roundtrip", lambda z_: codec.roundtrip(z_), (z,)),
+            ("roundtrip+base",
+             lambda z_, b_, p_: codec.roundtrip(z_, base=b_, present=p_),
+             (z, base, present)),
+    ):
+        tr = trace(fn, *args)
+        viol.extend(f"{hook}: {v}" for v in tr.scan_safety_violations())
+        if hook in ("decode(encode)", "roundtrip", "roundtrip+base") and tr.ok:
+            out = tr.jaxpr.out_avals[0]
+            if tuple(out.shape) != (_M, _N):
+                findings.append(Finding(
+                    "error", "jaxpr", subject,
+                    f"{hook} output shape {tuple(out.shape)} != input "
+                    f"{(_M, _N)} (receiver view must be shape-preserving)"))
+
+    if codec.scan_safe and viol:
+        findings.extend(Finding("error", "jaxpr", subject,
+                                f"declared scan_safe=True but {v}")
+                        for v in viol)
+    elif not codec.scan_safe and not viol:
+        findings.append(Finding(
+            "warn", "jaxpr", subject,
+            "declared scan_safe=False but encode/decode trace clean — "
+            "stale flag?"))
+    else:
+        findings.append(Finding("ok", "jaxpr", subject,
+                                f"scan_safe={codec.scan_safe} verified"))
+
+    # --- kernel spec consistency -------------------------------------
+    spec = codec_kernel_spec(codec)
+    if spec is not None:
+        if spec["mode"] not in MODES:
+            findings.append(Finding(
+                "error", "jaxpr", subject,
+                f"codec_kernel_spec mode {spec['mode']!r} not in kernel "
+                f"MODES {MODES}"))
+        elif (spec["mode"] == "identity") != codec.is_identity:
+            findings.append(Finding(
+                "error", "jaxpr", subject,
+                f"codec_kernel_spec mode {spec['mode']!r} disagrees with "
+                f"is_identity={codec.is_identity}"))
+        else:
+            z3, w = _sds((_K, _M, _N)), _sds((_K,))
+            if spec["mode"] == "delta":
+                tr = trace(lambda z_, w_, b_: fused_round(
+                    z_, w_, None, b_, mode=spec["mode"], bits=spec["bits"],
+                    sharpen=False), z3, w, base)
+            else:
+                tr = trace(lambda z_, w_: fused_round(
+                    z_, w_, None, mode=spec["mode"], bits=spec["bits"],
+                    sharpen=False), z3, w)
+            if not tr.ok:
+                findings.append(Finding(
+                    "error", "jaxpr", subject,
+                    f"codec_kernel_spec {spec} rejected by fused_round: "
+                    f"{type(tr.error).__name__}: {tr.error}"))
+            else:
+                findings.append(Finding(
+                    "ok", "jaxpr", subject,
+                    f"codec_kernel_spec {spec} accepted by fused_round"))
+    return findings
+
+
+def run(strategies=None, codecs=None) -> List[Finding]:
+    """The full pass over both registries (or explicit dict overrides —
+    the fixture self-tests inject deliberately broken entries here)."""
+    if strategies is None:
+        from repro.fl.strategies import STRATEGIES
+        strategies = STRATEGIES
+    if codecs is None:
+        from repro.compress.codecs import CODECS
+        codecs = CODECS
+    findings: List[Finding] = []
+    for name, ctor in strategies.items():
+        findings.extend(check_strategy(name, ctor))
+    for name, factory in codecs.items():
+        findings.extend(check_codec(name, factory))
+    return findings

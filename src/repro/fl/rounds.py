@@ -43,6 +43,7 @@ from repro.data.synthetic import dirichlet_partition, make_public_private, pad_c
 from repro.fl.cohorts import ClientModels, resolve_cohorts
 from repro.fl.config import FLConfig
 from repro.fl.scenarios import Scenario
+from repro.fl.strategies import base as strat_base
 from repro.fl.strategies.base import Strategy
 from repro.models.resnet import apply_mlp, init_mlp
 
@@ -543,7 +544,12 @@ class FederatedDistillation:
         # stack in global client order regardless of the cohort mix.
         x_round = self.x_pub[idx_j]
         z_all = self._predict_all(self.client_params, x_round)  # (K, m, N)
-        z_all = s.transmit(z_all, self.rng)
+        # jax mode matches the device engines' per-round transmit key;
+        # numpy mode has no key stream (strategies must tolerate None)
+        tkey = (jax.random.fold_in(jax.random.fold_in(self._key_rounds, t),
+                                   strat_base.TRANSMIT_SALT)
+                if self.rng_backend == "jax" else None)
+        z_all = s.transmit(z_all, tkey)
         if not self.codec_up.is_identity:  # lossy wire: what the server sees
             z_all = self.codec_up.roundtrip(z_all, base=base,
                                             present=base_present)

@@ -38,6 +38,7 @@ import numpy as np
 from repro.core import cache as cache_lib
 from repro.core import comm as comm_lib
 from repro.kernels import round_kernel
+from repro.fl.strategies.base import TRANSMIT_SALT
 from repro.fl.rounds import (
     FederatedDistillation,
     History,
@@ -144,7 +145,9 @@ class ScannedFederatedDistillation(FederatedDistillation):
         # --- uplink + aggregation (fixed shapes, participation-masked) ----
         x_round = self.x_pub[idx]
         z_all = self._predict_all(cp, x_round)             # (K, m, N)
-        z_all = s.transmit(z_all, None)
+        # per-round transmit key: an extra fold off kt (DCE'd when the
+        # strategy ignores it, so the legacy key stream is untouched)
+        z_all = s.transmit(z_all, jax.random.fold_in(kt, TRANSMIT_SALT))
         if self._fused:
             # fused fast path: uplink codec round trip + masked
             # aggregation + sharpening in one round_kernel VMEM pass

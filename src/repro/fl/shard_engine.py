@@ -76,6 +76,7 @@ from repro.fl.rounds import (
     val_loss_soft,
 )
 from repro.fl.scan_engine import ScannedFederatedDistillation
+from repro.fl.strategies.base import TRANSMIT_SALT
 from repro.kernels import round_kernel
 from repro.launch.mesh import (
     make_production_mesh,
@@ -288,7 +289,9 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
         # is identical to the homogeneous path
         x_round = consts["x_pub"][idx]
         z_all = self._predict_all(cp, x_round)         # (kloc, m, N)
-        z_all = s.transmit(z_all, None)
+        # per-round transmit key, replicated across shards (same fold on
+        # every shard; DCE'd when the strategy ignores it)
+        z_all = s.transmit(z_all, jax.random.fold_in(kt, TRANSMIT_SALT))
         if self._fused:
             # fused fast path: codec round trip + linear moments in one
             # round_kernel pass per shard; the psum + finalize
@@ -438,3 +441,33 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
     def _aot_args(self, ts, offline, do_eval):
         return (self._initial_carry(), (ts, offline, do_eval),
                 self._consts())
+
+    # ------------------------------------------------------------------
+    def carry_update_fn(self):
+        """The one-round carry update under the engine's real shard_map,
+        plus matching abstract arguments — the entry point for the
+        static replication checker
+        (:mod:`repro.analysis.replication_checks`).
+
+        The round program runs with ``check_rep=False`` (the scan body
+        defeats the partitioner's replication inference), so nothing at
+        compile time verifies that the carry leaves ``_specs()``
+        declares replicated (``P()``) really stay bit-identical across
+        client shards — the exact invariant the PR 5 ``last_sync`` bug
+        violated.  The checker traces ``jax.make_jaxpr(fn)(*abstract)``
+        (one shard_map equation) and proves it by ``axis_index`` taint
+        analysis instead.
+        """
+        carry_specs, xs_specs, consts_specs = self._specs()
+        fn = _shard_map_fn(
+            lambda carry, xs, consts: self._round_device_sharded(
+                carry, xs, consts),
+            mesh=self.mesh, in_specs=(carry_specs, xs_specs, consts_specs),
+            out_specs=(carry_specs, P()), check_rep=False)
+        abstract = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+            (self._initial_carry(),
+             (jnp.int32(0), jnp.zeros(self.cfg.n_clients, bool),
+              jnp.asarray(False)),
+             self._consts()))
+        return fn, abstract

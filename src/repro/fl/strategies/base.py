@@ -8,12 +8,19 @@ two.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
-import numpy as np
 
-__all__ = ["Strategy"]
+__all__ = ["Strategy", "TRANSMIT_SALT"]
+
+# Engines derive the per-round transmit key as
+# ``fold_in(fold_in(key_rounds, t), TRANSMIT_SALT)`` — an extra fold off
+# the round key rather than a wider ``split`` so strategies that ignore
+# the key (the common case) leave the legacy key stream untouched (the
+# unused fold_in is dead code; golden ledgers stay byte-identical).
+TRANSMIT_SALT = 71
 
 
 class Strategy:
@@ -25,14 +32,39 @@ class Strategy:
     downlink_bits = 32.0
     # True when every hook is jit/scan-traceable (pure jnp, no host RNG
     # or dynamic shapes): required by the scanned multi-round engine.
+    # ``repro.analysis.jaxpr_checks`` verifies the declaration by tracing
+    # every hook on abstract shapes — a True flag on a strategy that
+    # calls back to the host (or a stale False on a pure-jnp one) is a
+    # build failure, not a latent engine crash.
     scan_safe = False
+
+    # Constructor-kwarg variants the static analyzer instantiates when
+    # tracing this class (each entry is one ``cls(**kw)`` call).  Cover
+    # the option combinations that change the traced graph — e.g. both
+    # values of a flag that switches the fused path on or off.
+    analysis_variants: Tuple[Dict[str, Any], ...] = ({},)
 
     def __init__(self, **kw):
         self.opts = kw
 
+    def declared_contract(self) -> Dict[str, Any]:
+        """The machine-checkable contract this instance claims.
+
+        ``repro.analysis`` traces the hooks and diffs the trace against
+        these declarations; engines trust them at construction time."""
+        return {
+            "name": self.name,
+            "scan_safe": bool(self.scan_safe),
+            "supports_fused_round": bool(self.supports_fused_round),
+            "uses_cache": bool(self.uses_cache),
+        }
+
     # uplink payload transform (e.g. CFD quantization). Returns z as the
-    # server sees it.
-    def transmit(self, z_clients: jnp.ndarray, rng: np.random.Generator) -> jnp.ndarray:
+    # server sees it.  ``key`` is a per-round jax PRNG key (or None on
+    # the legacy numpy host path) — the scan-safe contract forbids host
+    # RNG here, so stochastic transforms must draw from ``key``.
+    def transmit(self, z_clients: jnp.ndarray,
+                 key: Optional[jax.Array] = None) -> jnp.ndarray:
         return z_clients
 
     # per-(client, sample) upload mask (Selective-FD). True = uploaded.

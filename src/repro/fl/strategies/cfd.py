@@ -22,6 +22,7 @@ class CFDStrategy(Strategy):
 
     name = "cfd"
     scan_safe = True  # transmit() is deterministic jnp; mean aggregation
+    analysis_variants = ({}, {"b_up": 8})
 
     def __init__(self, b_up: int = 1, b_down: int = 32, **kw):
         super().__init__(**kw)
@@ -30,7 +31,7 @@ class CFDStrategy(Strategy):
         self.b_up = b_up
         self._codec = QuantCodec(b_up)
 
-    def transmit(self, z, rng):
+    def transmit(self, z, key=None):
         return self._codec.roundtrip(z)
 
     def aggregate(self, z, um, t):

@@ -15,6 +15,10 @@ class COMETStrategy(Strategy):
     distills from its cluster's teacher (+ server uses the global mean)."""
 
     name = "comet"
+    # scan_safe stays False: ``aggregate`` clusters with host numpy
+    # k-means (np.asarray on traced values + np.random.default_rng),
+    # which the analyzer's trace of ``aggregate`` confirms.
+    analysis_variants = ({}, {"n_clusters": 3})
 
     def __init__(self, n_clusters: int = 2, **kw):
         super().__init__(**kw)

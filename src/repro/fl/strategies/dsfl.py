@@ -14,6 +14,7 @@ class ERAStrategy(Strategy):
 
     name = "dsfl"
     scan_safe = True
+    analysis_variants = ({}, {"T": 0.5})
 
     def aggregate(self, z, um, t):
         return era_lib.era(jnp.mean(z, axis=0), self.opts.get("T", 0.1)), None

@@ -33,6 +33,8 @@ class EnhancedERAStrategy(Strategy):
     name = "scarlet"
     uses_cache = True
     scan_safe = True
+    # adaptive beta flips supports_fused_round off — trace both graphs
+    analysis_variants = ({}, {"beta": "adaptive"})
 
     def _adaptive_beta(self, zbar):
         n = zbar.shape[-1]

@@ -15,6 +15,7 @@ class SelectiveFDStrategy(Strategy):
 
     name = "selective_fd"
     scan_safe = True
+    analysis_variants = ({}, {"tau_client": 0.25})
 
     def __init__(self, tau_client: float = 0.0625, **kw):
         super().__init__(**kw)

@@ -9,7 +9,10 @@ accumulators in VMEM scratch, (block_q x d) x (block_k x d) MXU matmuls.
 Grid = (batch, q_heads, q_blocks, k_blocks), k minor (sequential).  GQA
 maps query head h to KV head h // (H // Hkv) in the BlockSpec index_map
 — KV is never materialized per-query-head (HBM traffic stays at Hkv).
-Hardware alignment: block_q/block_k multiples of 8 and 128 lanes via d.
+Hardware alignment: block_q/block_k are kept sublane-aligned (8 rows
+for f32, 16 for bf16) via ``runtime.align_block_rows``; ragged sequence
+lengths are padded up to the block multiple, with padded KV positions
+masked to -inf in-kernel and padded query rows sliced off.
 """
 from __future__ import annotations
 
@@ -21,14 +24,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import (
+    align_block_rows,
+    resolve_interpret,
+    sublanes_for_dtype,
+)
 
 _NEG = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                   *, nk: int, block_q: int, block_k: int, causal: bool,
-                  window: int, scale: float):
+                  window: int, scale: float, sk: int):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -50,6 +57,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         mask &= k_idx <= q_idx
     if window:
         mask &= k_idx > q_idx - window
+    if sk % block_k:  # KV padded up to the block multiple: mask the tail
+        mask &= k_idx < sk
     s = jnp.where(mask, s, _NEG)
 
     m_prev = m_ref[...]
@@ -82,21 +91,29 @@ def flash_attention(
     B, Sq, H, d = q.shape
     _, Sk, Hkv, _ = k.shape
     rep = H // Hkv
-    block_q = min(block_q, Sq)
-    block_k = min(block_k, Sk)
-    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
-    nq, nk = Sq // block_q, Sk // block_k
+    # Shrink-to-input must stay sublane-aligned (8 rows for f32, 16 for
+    # bf16): a bare min() produced blocks like 4 or 10 for small/odd
+    # sequence lengths, which interpret fine on CPU but mis-tile on
+    # native TPU (the era_kernel bug class).  Sequences are padded up to
+    # the block multiple instead; padded KV positions are masked to -inf
+    # in-kernel and padded query rows are sliced off.
+    sub = sublanes_for_dtype(q.dtype)
+    block_q = align_block_rows(block_q, Sq, align=sub)
+    block_k = align_block_rows(block_k, Sk, align=sub)
+    sq_pad = (-Sq) % block_q
+    sk_pad = (-Sk) % block_k
+    nq, nk = (Sq + sq_pad) // block_q, (Sk + sk_pad) // block_k
     scale = 1.0 / math.sqrt(d)
 
     # (B, H, S, d) layout for clean 2D tiles
-    qt = q.transpose(0, 2, 1, 3)
-    kt = k.transpose(0, 2, 1, 3)
-    vt = v.transpose(0, 2, 1, 3)
+    qt = jnp.pad(q.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, sq_pad), (0, 0)))
+    kt = jnp.pad(k.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, sk_pad), (0, 0)))
+    vt = jnp.pad(v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, sk_pad), (0, 0)))
 
     out = pl.pallas_call(
         functools.partial(_flash_kernel, nk=nk, block_q=block_q,
                           block_k=block_k, causal=causal, window=window,
-                          scale=scale),
+                          scale=scale, sk=Sk),
         grid=(B, H, nq, nk),
         in_specs=[
             pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
@@ -104,7 +121,7 @@ def flash_attention(
             pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h // rep, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Sq, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + sq_pad, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q,), jnp.float32),
@@ -112,7 +129,28 @@ def flash_attention(
         ],
         interpret=interpret,
     )(qt, kt, vt)
-    return out.transpose(0, 2, 1, 3)
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+def analysis_cases():
+    """(label, fn, abstract args) triples for the static BlockSpec lint
+    (:mod:`repro.analysis.pallas_checks`); traced with
+    ``interpret=False``, never executed.  Includes the small/odd
+    sequence-length cases whose ``min(block, S)`` shrink used to emit
+    misaligned blocks."""
+    S, f32, bf16 = jax.ShapeDtypeStruct, jnp.float32, jnp.bfloat16
+
+    def case(B, Sq, Sk, H, Hkv, d, dtype=f32, **kw):
+        fn = lambda q, k, v: flash_attention(q, k, v, interpret=False, **kw)
+        return fn, (S((B, Sq, H, d), dtype), S((B, Sk, Hkv, d), dtype),
+                    S((B, Sk, Hkv, d), dtype))
+
+    return [
+        ("attn/S128-gqa-d64", *case(2, 128, 128, 4, 2, 64)),
+        ("attn/small-Sq4", *case(1, 4, 4, 2, 2, 64)),
+        ("attn/odd-S100-window", *case(1, 100, 100, 2, 1, 64, window=7)),
+        ("attn/bf16-S64", *case(1, 64, 64, 2, 2, 64, dtype=bf16)),
+    ]
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.runtime import (
+    LANES,
+    align_block_rows,
+    resolve_interpret,
+    sublanes_for_dtype,
+)
 
 _NEG = -1e30
 
@@ -67,6 +72,13 @@ def distill_loss(logits: jnp.ndarray, teacher: jnp.ndarray,
     """
     interpret = resolve_interpret(interpret)
     B, V = logits.shape
+    # same alignment audit as attn_kernel: caller-supplied block sizes
+    # are clamped to the input but kept sublane-aligned (rows) and
+    # lane-aligned (vocab) so odd blocks like 10 or 100 cannot reach the
+    # BlockSpecs — they interpret fine on CPU but mis-tile natively
+    block_b = align_block_rows(block_b, B,
+                               align=sublanes_for_dtype(logits.dtype))
+    block_v = align_block_rows(block_v, V, align=LANES)
     b_pad = (-B) % block_b
     v_pad = (-V) % block_v
     l = jnp.pad(logits, ((0, b_pad), (0, v_pad)), constant_values=_NEG)
@@ -91,3 +103,19 @@ def distill_loss(logits: jnp.ndarray, teacher: jnp.ndarray,
         interpret=interpret,
     )(l, t)
     return out[:B]
+
+
+def analysis_cases():
+    """(label, fn, abstract args) triples for the static BlockSpec lint
+    (:mod:`repro.analysis.pallas_checks`); traced with
+    ``interpret=False``, never executed."""
+    S, f32 = jax.ShapeDtypeStruct, jnp.float32
+    return [
+        ("distill/B100-V163840",
+         lambda l, t: distill_loss(l, t, interpret=False),
+         (S((100, 163840), f32), S((100, 163840), f32))),
+        ("distill/B13-V1000-oddblocks",
+         lambda l, t: distill_loss(l, t, block_b=10, block_v=100,
+                                   interpret=False),
+         (S((13, 1000), f32), S((13, 1000), f32))),
+    ]

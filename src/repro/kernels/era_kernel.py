@@ -21,7 +21,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.runtime import align_block_rows, resolve_interpret
+from repro.kernels.runtime import (
+    VMEM_BUDGET_INTERPRET,
+    VMEM_BUDGET_NATIVE,
+    align_block_rows,
+    fit_block_rows,
+    resolve_interpret,
+)
 
 _EPS = 1e-12
 
@@ -89,9 +95,15 @@ def enhanced_era_fused(z_clients: jnp.ndarray, beta, block_b: int = 128,
     """(K, B, N) client soft-labels -> aggregated + sharpened (B, N)."""
     interpret = resolve_interpret(interpret)
     K, B, N = z_clients.shape
-    # shrink the (default 128-row) block to small B, kept 8-aligned
-    block_b = align_block_rows(block_b, B)
     n_pad = (-N) % 128
+    # shrink the (default 128-row) block to small B, kept 8-aligned —
+    # and to the per-block VMEM budget: the whole K axis is resident per
+    # block ((K, bb, Np) BlockSpec), so bb must shrink as K grows or
+    # large-K stacks blow the ~16 MB VMEM on native TPU.  Row blocking
+    # never changes results (every row is reduced/sharpened
+    # independently), only the grid.
+    budget = VMEM_BUDGET_INTERPRET if interpret else VMEM_BUDGET_NATIVE
+    block_b = fit_block_rows(block_b, B, K * (N + n_pad) * 4, budget)
     b_pad = (-B) % block_b
     z = jnp.pad(z_clients, ((0, 0), (0, b_pad), (0, n_pad)))
     _, Bp, Np = z.shape
@@ -108,3 +120,25 @@ def enhanced_era_fused(z_clients: jnp.ndarray, beta, block_b: int = 128,
         interpret=interpret,
     )(z, beta_arr)
     return out[:B, :N]
+
+
+def analysis_cases():
+    """(label, fn, abstract args) triples for the static BlockSpec lint
+    (:mod:`repro.analysis.pallas_checks`): each is traced with
+    ``interpret=False`` — never executed — so the lint inspects the
+    exact BlockSpecs a native-TPU compile would use."""
+    S, f32 = jax.ShapeDtypeStruct, jnp.float32
+    return [
+        ("era/B1000-N10",
+         lambda z: enhanced_era(z, 1.5, interpret=False),
+         (S((1000, 10), f32),)),
+        ("era/B10-N10",
+         lambda z: enhanced_era(z, 1.5, interpret=False),
+         (S((10, 10), f32),)),
+        ("era_fused/K200-B100-N10",
+         lambda z: enhanced_era_fused(z, 1.5, interpret=False),
+         (S((200, 100, 10), f32),)),
+        ("era_fused/K1000-B1000-N100",
+         lambda z: enhanced_era_fused(z, 1.5, interpret=False),
+         (S((1000, 1000, 100), f32),)),
+    ]

@@ -71,3 +71,18 @@ def quantize_dequantize(z: jnp.ndarray, bits: int, block_b: int = 256,
         interpret=interpret,
     )(zp)
     return out[:B, :N]
+
+
+def analysis_cases():
+    """(label, fn, abstract args) triples for the static BlockSpec lint
+    (:mod:`repro.analysis.pallas_checks`); traced with
+    ``interpret=False``, never executed."""
+    S, f32 = jax.ShapeDtypeStruct, jnp.float32
+    return [
+        ("quant/B1000-N10-bits8",
+         lambda z: quantize_dequantize(z, 8, interpret=False),
+         (S((1000, 10), f32),)),
+        ("quant/B10-N1-bits1",
+         lambda z: quantize_dequantize(z, 1, interpret=False),
+         (S((10, 1), f32),)),
+    ]

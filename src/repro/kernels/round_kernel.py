@@ -52,7 +52,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.runtime import align_block_rows, resolve_interpret
+from repro.kernels.runtime import (
+    SUBLANES_F32,
+    VMEM_BUDGET_INTERPRET,
+    VMEM_BUDGET_NATIVE,
+    align_block_rows,
+    fit_block_rows,
+    resolve_interpret,
+)
 
 # numeric constants mirrored from the per-op path: one-quantization-step
 # parity depends on using the *same* epsilons
@@ -66,11 +73,11 @@ MODES = ("identity", "quant", "delta")
 _BETA_SPEC = pl.BlockSpec(memory_space=pltpu.SMEM)
 
 # VMEM budget for the (K, bm, Np) block: the K axis is resident per
-# block, so bm must shrink as K grows.  Native TPU keeps headroom for
-# Mosaic's double buffering; the interpreter has no VMEM, so a larger
-# budget just means fewer grid steps.
-_VMEM_BUDGET_NATIVE = 4 * 2 ** 20
-_VMEM_BUDGET_INTERPRET = 16 * 2 ** 20
+# block, so bm must shrink as K grows.  Shared constants in
+# kernels/runtime.py (era_kernel's fused path sizes against the same
+# budget, and repro.analysis.pallas_checks lints against the limit).
+_VMEM_BUDGET_NATIVE = VMEM_BUDGET_NATIVE
+_VMEM_BUDGET_INTERPRET = VMEM_BUDGET_INTERPRET
 
 
 def _qdq(r, valid, levels):
@@ -135,10 +142,7 @@ def _fused_round_kernel(*refs, k_clients: int, n_valid: int,
 
 def _auto_block_m(m: int, k: int, n_padded: int, interpret: bool) -> int:
     budget = _VMEM_BUDGET_INTERPRET if interpret else _VMEM_BUDGET_NATIVE
-    bm = align_block_rows(128, m)
-    while bm > 8 and k * bm * n_padded * 4 > budget:
-        bm = align_block_rows(bm // 2, m)
-    return bm
+    return fit_block_rows(128, m, k * n_padded * 4, budget)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "bits", "sharpen",
@@ -169,18 +173,26 @@ def fused_round(z_clients: jnp.ndarray, weights: jnp.ndarray, beta=None,
     K, M, N = z_clients.shape
     n_pad = (-N) % 128
     Np = N + n_pad
+    # The client axis is padded to the sublane tile: the (K, 1) weights
+    # operand makes K a *sublane* dim, so an unaligned client count
+    # (e.g. K=50) mis-tiles natively — caught by the static BlockSpec
+    # lint (repro.analysis.pallas_checks).  Padded clients carry zero
+    # weight, so the reduction (and the /K mean) is unchanged.
+    k_pad = (-K) % SUBLANES_F32
+    Kp = K + k_pad
     bm = (align_block_rows(block_m, M) if block_m is not None
-          else _auto_block_m(M, K, Np, interpret))
+          else _auto_block_m(M, Kp, Np, interpret))
     m_pad = (-M) % bm
-    z = jnp.pad(z_clients, ((0, 0), (0, m_pad), (0, n_pad)))
+    z = jnp.pad(z_clients, ((0, k_pad), (0, m_pad), (0, n_pad)))
     Mp = M + m_pad
-    w = jnp.reshape(weights.astype(jnp.float32), (K, 1))
+    w = jnp.pad(jnp.reshape(weights.astype(jnp.float32), (K, 1)),
+                ((0, k_pad), (0, 0)))
     levels = float(2 ** bits - 1) if bits is not None else None
 
     operands = [z, w]
     in_specs = [
-        pl.BlockSpec((K, bm, Np), lambda i: (0, i, 0)),
-        pl.BlockSpec((K, 1), lambda i: (0, 0)),
+        pl.BlockSpec((Kp, bm, Np), lambda i: (0, i, 0)),
+        pl.BlockSpec((Kp, 1), lambda i: (0, 0)),
     ]
     if mode == "delta":
         operands.append(jnp.pad(base.astype(jnp.float32),
@@ -200,6 +212,27 @@ def fused_round(z_clients: jnp.ndarray, weights: jnp.ndarray, beta=None,
         interpret=interpret,
     )(*operands)
     return out[:M, :N]
+
+
+def analysis_cases():
+    """(label, fn, abstract args) triples for the static BlockSpec lint
+    (:mod:`repro.analysis.pallas_checks`); traced with
+    ``interpret=False``, never executed."""
+    S, f32 = jax.ShapeDtypeStruct, jnp.float32
+    return [
+        ("round/identity-sharpen-K200",
+         lambda z, w: fused_round(z, w, 1.5, mode="identity",
+                                  sharpen=True, interpret=False),
+         (S((200, 100, 10), f32), S((200,), f32))),
+        ("round/quant8-sharpen-K1000",
+         lambda z, w: fused_round(z, w, 1.5, mode="quant", bits=8,
+                                  sharpen=True, interpret=False),
+         (S((1000, 64, 10), f32), S((1000,), f32))),
+        ("round/delta8-linear-K50",
+         lambda z, w, b: fused_round(z, w, None, b, mode="delta", bits=8,
+                                     sharpen=False, interpret=False),
+         (S((50, 24, 10), f32), S((50,), f32), S((24, 10), f32))),
+    ]
 
 
 # ---------------------------------------------------------------------------

@@ -18,11 +18,34 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 # f32 sublane count: the second-to-last tile dim every f32 VMEM block
 # must be a multiple of (the lane dim is handled by 128-padding in the
 # wrappers).
 SUBLANES_F32 = 8
+
+# lane count: the minor tile dim of every VMEM block, dtype-independent.
+LANES = 128
+
+# Per-block VMEM budgets shared by every kernel whose block size is
+# auto-sized (round_kernel, era_kernel fused): the K/client axis is
+# resident per block, so the row block must shrink as it grows.  Native
+# TPU keeps headroom below the ~16 MB/core VMEM for Mosaic's double
+# buffering; the interpreter has no VMEM, so a larger budget just means
+# fewer grid steps.  VMEM_LIMIT_NATIVE is the hard per-core capacity
+# the static lint (repro.analysis.pallas_checks) enforces.
+VMEM_BUDGET_NATIVE = 4 * 2 ** 20
+VMEM_BUDGET_INTERPRET = 16 * 2 ** 20
+VMEM_LIMIT_NATIVE = 16 * 2 ** 20
+
+
+def sublanes_for_dtype(dtype) -> int:
+    """Minimum sublane multiple (second-to-last tile dim) for ``dtype``:
+    8 for 4-byte types, 16 for 2-byte, 32 for 1-byte — the (sublane,
+    128) native tile shapes."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return max(SUBLANES_F32, 32 // max(itemsize, 1))
 
 
 def default_interpret() -> bool:
@@ -45,3 +68,19 @@ def align_block_rows(block_b: int, n_rows: int,
     the wrappers' row padding covers the overhang.  Always >= ``align``.
     """
     return -(-max(align, min(block_b, n_rows)) // align) * align
+
+
+def fit_block_rows(block_b: int, n_rows: int, bytes_per_row: float,
+                   budget: int, align: int = SUBLANES_F32) -> int:
+    """Shrink an (aligned) row block until its resident footprint fits
+    ``budget``: halve while ``block_b * bytes_per_row`` exceeds it,
+    keeping the block ``align``-row aligned and >= ``align``.
+
+    ``bytes_per_row`` is everything resident per row of the block —
+    e.g. ``K * n_lanes * 4`` for a kernel that keeps the whole client
+    axis in VMEM per row block (round_kernel, era_kernel fused).
+    """
+    bb = align_block_rows(block_b, n_rows, align=align)
+    while bb > align and bb * bytes_per_row > budget:
+        bb = align_block_rows(bb // 2, n_rows, align=align)
+    return bb

@@ -186,6 +186,8 @@ class HloSummary:
 
 def analyze(text: str) -> HloSummary:
     comps = parse_hlo(text)
+    if not comps:  # empty / comment-only module: a zero summary, not a crash
+        return HloSummary(0.0, 0.0, 0.0, {}, {}, 0)
     for c in comps.values():
         _analyze_comp(c)
     # call multiplicities from the entry computation

@@ -1,0 +1,136 @@
+"""Edge-case tests for ``repro.launch.hlo_analysis.analyze`` on
+hand-written HLO text: empty modules, fusion-only modules, modules with
+no collectives, entry-computation fallback, and residual while loops.
+The dry-run roofline feeds real XLA dumps through this parser; these
+pin its conventions on minimal inputs.
+"""
+from repro.launch.hlo_analysis import HloSummary, analyze, parse_hlo
+
+FUSION_ONLY = """\
+%fused_dot (p0: f32[8,4], p1: f32[4,16]) -> f32[8,16] {
+  %p0 = f32[8,4] parameter(0)
+  %p1 = f32[4,16] parameter(1)
+  ROOT %dot.1 = f32[8,16] dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY %main.1 (a: f32[8,4], b: f32[4,16]) -> f32[8,16] {
+  %a = f32[8,4] parameter(0)
+  %b = f32[4,16] parameter(1)
+  ROOT %fusion = f32[8,16] fusion(%a, %b), kind=kOutput, calls=%fused_dot
+}
+"""
+
+NO_COLLECTIVES = """\
+ENTRY %main.2 (x: f32[32]) -> f32[32] {
+  %x = f32[32] parameter(0)
+  %e = f32[32] exponential(%x)
+  ROOT %t = f32[32] tanh(%e)
+}
+"""
+
+ALL_REDUCE = """\
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main.3 (x: f32[128]) -> f32[128] {
+  %x = f32[128] parameter(0)
+  ROOT %ar = f32[128] all-reduce(%x), replica_groups={}, to_apply=%add
+}
+"""
+
+NO_ENTRY_MARKER = """\
+%helper (p: f32[4]) -> f32[4] {
+  %p = f32[4] parameter(0)
+  ROOT %n = f32[4] negate(%p)
+}
+
+%top.0 (x: f32[4]) -> f32[4] {
+  %x = f32[4] parameter(0)
+  ROOT %c = f32[4] call(%x), to_apply=%helper
+}
+"""
+
+WITH_WHILE = """\
+%body (s: s32[]) -> s32[] {
+  %s = s32[] parameter(0)
+  %one = s32[] constant(1)
+  ROOT %n = s32[] add(%s, %one)
+}
+
+%cond (s: s32[]) -> pred[] {
+  %s = s32[] parameter(0)
+  %lim = s32[] constant(10)
+  ROOT %lt = pred[] compare(%s, %lim), direction=LT
+}
+
+ENTRY %main.4 (x: s32[]) -> s32[] {
+  %x = s32[] parameter(0)
+  ROOT %w = s32[] while(%x), condition=%cond, body=%body
+}
+"""
+
+
+def test_empty_module():
+    s = analyze("")
+    assert isinstance(s, HloSummary)
+    assert s.dot_flops == 0.0
+    assert s.collective_bytes == 0.0
+    assert s.residual_while_loops == 0
+
+
+def test_comment_only_module():
+    s = analyze("# HloModule foo\n# no computations here\n")
+    assert s.dot_flops == 0.0 and s.collective_bytes == 0.0
+
+
+def test_fusion_only_dot_flops():
+    s = analyze(FUSION_ONLY)
+    # dot: out 8*16=128 elems, contracted dim 4 -> 2*128*4 = 1024 FLOPs,
+    # weighted by one fusion call from the entry
+    assert s.dot_flops == 2.0 * 8 * 16 * 4
+    assert s.collective_bytes == 0.0
+    assert s.residual_while_loops == 0
+
+
+def test_no_collectives_counts_transcendentals():
+    s = analyze(NO_COLLECTIVES)
+    assert s.collective_bytes == 0.0
+    assert s.collective_by_kind == {}
+    assert s.transcendental_elems == 64  # exp(32) + tanh(32)
+
+
+def test_all_reduce_bytes_convention():
+    s = analyze(ALL_REDUCE)
+    # all-reduce convention: 2 x max(in, out) = 2 * 128 * 4B = 1024
+    assert s.collective_by_kind == {"all-reduce": 1024.0}
+    assert s.collective_bytes == 1024.0
+    assert s.collective_counts == {"all-reduce": 1}
+    # the scalar %add reduction computation contributes no dot flops
+    assert s.dot_flops == 0.0
+
+
+def test_entry_fallback_without_main_marker():
+    # no ENTRY/"main" name: the computation never called by others wins
+    s = analyze(NO_ENTRY_MARKER)
+    comps = parse_hlo(NO_ENTRY_MARKER)
+    assert set(comps) == {"%helper", "%top.0"}
+    assert comps["%top.0"].called == ["%helper"]
+    # both reachable from the fallback entry; nothing crashes, no flops
+    assert s.dot_flops == 0.0
+
+
+def test_residual_while_loop_flagged():
+    s = analyze(WITH_WHILE)
+    assert s.residual_while_loops == 1
+
+
+def test_parse_hlo_shapes_and_operands():
+    comps = parse_hlo(FUSION_ONLY)
+    dot = comps["%fused_dot"].instrs["%dot.1"]
+    assert dot.opcode == "dot"
+    assert dot.operands == ["%p0", "%p1"]
+    assert dot.out_elems == 128
+    assert dot.out_bytes == 128 * 4

@@ -293,3 +293,73 @@ def test_model_attention_pallas_path_parity():
         cm.ATTN_IMPL = "xla"
     np.testing.assert_allclose(np.asarray(l_xla), np.asarray(l_pl),
                                rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Block-alignment regressions: pre-fix, flash_attention shrank blocks with
+# a bare min() (misaligned sublane blocks for small/odd S, and a hard
+# assert for S not a multiple of the block); distill_loss forwarded
+# caller block sizes unaligned.  These shapes fail on the pre-fix code.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Sq,Sk,causal,window", [
+    (4, 4, True, 0),        # pre-fix: block_q=4, misaligned sublane block
+    (100, 100, True, 7),    # pre-fix: block 100 (odd), misaligned
+    (130, 130, True, 0),    # pre-fix: 130 % 128 != 0 -> AssertionError
+    (8, 20, False, 0),      # ragged KV: padded tail must be masked
+])
+def test_flash_attention_ragged_and_small_seq(Sq, Sk, causal, window):
+    B, H, Hkv, d = 1, 2, 1, 64
+    q = jax.random.normal(jax.random.fold_in(KEY, 4), (B, Sq, H, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 5), (B, Sk, Hkv, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 6), (B, Sk, Hkv, d))
+    out = attn_kernel.flash_attention(q, k, v, causal=causal, window=window)
+    exp = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_blocks_stay_sublane_aligned():
+    """The native-path BlockSpecs are lint-clean even for awkward shapes
+    (traced with interpret=False; nothing executes)."""
+    from repro.analysis import pallas_checks
+
+    for label, fn, args in attn_kernel.analysis_cases():
+        findings = pallas_checks.check_case(label, fn, args)
+        errs = [f for f in findings if f.level == "error"]
+        assert not errs, f"{label}: {[str(f) for f in errs]}"
+
+
+def test_distill_odd_caller_blocks_are_aligned():
+    """Caller-supplied odd block sizes are snapped to the tile grid and
+    still produce exact results."""
+    B, V = 13, 260
+    l = jax.random.normal(jax.random.fold_in(KEY, 7), (B, V))
+    t = _probs(jax.random.fold_in(KEY, 8), (B, V))
+    out = distill_kernel.distill_loss(l, t, block_b=10, block_v=100)
+    exp = ref.distill_loss(l, t)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+    from repro.analysis import pallas_checks
+
+    for label, fn, args in distill_kernel.analysis_cases():
+        findings = pallas_checks.check_case(label, fn, args)
+        errs = [f for f in findings if f.level == "error"]
+        assert not errs, f"{label}: {[str(f) for f in errs]}"
+
+
+@pytest.mark.parametrize("K", [7, 50])
+def test_fused_round_unaligned_client_counts(K):
+    """The (K, 1) weights operand makes K a sublane dim: unaligned client
+    counts (not multiples of 8) must be padded, not mis-tiled — and the
+    padding must not perturb the weighted reduction."""
+    from repro.kernels import round_kernel
+
+    rng = np.random.default_rng(3)
+    z = jnp.asarray(rng.dirichlet(np.ones(10), size=(K, 24)), jnp.float32)
+    w = jnp.asarray(rng.random(K), jnp.float32)
+    out = round_kernel.fused_round(z, w, 1.5, mode="identity", sharpen=True)
+    exp = ref.fused_round(z, w, 1.5, mode="identity", sharpen=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-6)
