@@ -76,11 +76,15 @@ def bench_env() -> Dict:
 
 
 def write_bench(path: str, name: str, rows: List[Dict],
-                quick: Optional[bool] = None) -> None:
+                quick: Optional[bool] = None,
+                telemetry: Optional[Dict] = None) -> None:
     """Write one benchmark's rows as a ``BENCH_<name>.json`` document —
     schema: {bench, schema, quick, env, rows}; rows keep every
     structured field the benchmark attached (``rounds_per_sec``,
-    ``*_bytes``, ...) beyond the printed CSV triple."""
+    ``*_bytes``, ...) beyond the printed CSV triple.  ``telemetry`` is
+    an optional device-plane summary (``TelemetryLog.summary()``) from
+    an instrumented run — the perf gate ignores the key; humans and the
+    ``repro.obs`` report reader don't."""
     doc = {
         "bench": name,
         "schema": BENCH_SCHEMA,
@@ -88,6 +92,8 @@ def write_bench(path: str, name: str, rows: List[Dict],
         "env": bench_env(),
         "rows": rows,
     }
+    if telemetry is not None:
+        doc["telemetry"] = telemetry
     with open(path, "w") as f:
         json.dump(doc, f, sort_keys=True, indent=2)
         f.write("\n")

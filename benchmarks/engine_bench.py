@@ -163,6 +163,20 @@ def _fused_vs_perop(counts, rounds) -> list:
     return rows
 
 
+def _telemetry_summary(rounds: int = QUICK_FUSED_ROUNDS) -> dict:
+    """Device-plane summary of a small instrumented scan run, embedded
+    in the BENCH doc so the benchmark record carries cache/comm counters
+    alongside the timings (the perf gate ignores the key)."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        _cfg(QUICK_CLIENT_COUNTS[0], rounds),
+        uplink_codec=FUSED_CODEC, telemetry=True)
+    eng = ScannedFederatedDistillation(
+        cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=4)
+    return eng.run(rounds).telemetry.summary()
+
+
 def run(quick: bool = False):
     if quick:
         rows = _scan_vs_host(QUICK_CLIENT_COUNTS, QUICK_ROUNDS)
@@ -185,7 +199,8 @@ def main():
     rows = run(quick=args.quick)
     emit(rows)
     if args.out:
-        write_bench(args.out, "engine", rows, quick=args.quick)
+        write_bench(args.out, "engine", rows, quick=args.quick,
+                    telemetry=_telemetry_summary())
 
 
 if __name__ == "__main__":

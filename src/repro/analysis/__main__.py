@@ -1,6 +1,6 @@
 """CLI: ``python -m repro.analysis [--strict] [--fast] [--selftest]``.
 
-Runs the three static passes over the real registries and prints a
+Runs the static passes over the real registries and prints a
 structured report.  Exit code: nonzero on any error; ``--strict`` also
 fails on warnings.  ``--selftest`` instead runs the passes over the
 deliberately broken fixtures and fails unless every one is flagged at
@@ -61,7 +61,8 @@ def main(argv=None) -> int:
     report.extend(jaxpr_checks.run())
     report.extend(pallas_checks.run())
     if not args.fast:
-        from repro.analysis import replication_checks
+        from repro.analysis import obs_checks, replication_checks
+        report.extend(obs_checks.run())
         report.extend(replication_checks.run())
     print(report.render(verbose=args.verbose))
     if args.json:
@@ -107,6 +108,21 @@ def _selftest(report, fast: bool = False) -> int:
             report.add("error", "selftest", label,
                        f"NOT flagged at level {want!r} "
                        f"(got {[f.level for f in got]})")
+
+    # telemetry fixture: a hook that smuggles a debug_callback into the
+    # instrumented round body must be caught by the obs pass
+    if not fast:
+        from repro.analysis import obs_checks
+        got = obs_checks.check_round_body(
+            "fixture/telemetry-callback", fixtures.telemetry_callback_engine())
+        hit = [f for f in got if f.level == "error"]
+        if hit:
+            report.add("ok", "selftest", "fixture/telemetry-callback",
+                       f"flagged as expected: {hit[0].message}")
+        else:
+            failures.append("fixture/telemetry-callback")
+            report.add("error", "selftest", "fixture/telemetry-callback",
+                       "debug_callback-smuggling telemetry hook NOT flagged")
 
     # replication fixtures (skipped under --fast: needs the 8-device mesh)
     if not fast:

@@ -20,7 +20,11 @@ One fixture per bug class the analyzer exists to catch:
   row block, a scalar parameter in VMEM, and a VMEM-overflowing block;
 - :func:`broken_carry_fn` / :func:`fixed_carry_fn` — a shard_map whose
   replicated-carry claim is violated by ``axis_index`` taint (the PR 5
-  ``last_sync`` bug, distilled) and its repaired twin.
+  ``last_sync`` bug, distilled) and its repaired twin;
+- :func:`telemetry_callback_engine` — a telemetry-enabled scan engine
+  whose ``telemetry_hook`` smuggles a ``jax.debug.callback`` into the
+  round body (the "just log it from the hook" mistake that would turn
+  the single-compilation engine into a per-round host round-trip).
 """
 from __future__ import annotations
 
@@ -155,6 +159,35 @@ def analysis_cases():
     """Same triples without the expectation, matching the kernel-module
     protocol so the fixture file can be linted like a real module."""
     return [(label, fn, args) for label, fn, args, _ in broken_kernel_cases()]
+
+
+# ---------------------------------------------------------------------------
+# Telemetry fixtures
+# ---------------------------------------------------------------------------
+
+def telemetry_callback_engine():
+    """A telemetry-enabled scan engine whose hook escapes to the host.
+
+    The hook looks innocent — it returns the row unchanged — but the
+    ``jax.debug.callback`` it calls plants a callback primitive inside
+    the compiled round body.  ``repro.analysis.obs_checks.
+    check_round_body`` must flag it as an error.
+    """
+    from repro.fl.config import FLConfig
+    from repro.fl.scan_engine import ScannedFederatedDistillation
+    from repro.fl.strategies import STRATEGIES
+
+    cfg = FLConfig(n_clients=4, rounds=2, public_size=32, public_per_round=8,
+                   n_classes=4, dim=8, hidden=8, private_size=32,
+                   local_steps=1, distill_steps=1, seed=0, telemetry=True)
+    eng = ScannedFederatedDistillation(cfg, STRATEGIES["mean"]())
+
+    def leaky_hook(tel, t):
+        jax.debug.callback(lambda h: None, tel.cache_hits)
+        return tel
+
+    eng.telemetry_hook = leaky_hook
+    return eng
 
 
 # ---------------------------------------------------------------------------

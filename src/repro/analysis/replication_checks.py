@@ -227,14 +227,21 @@ def check_engine(mesh: str = "2x4", n_clients: int = 8) -> List[Finding]:
     from repro.fl.strategies import STRATEGIES
 
     findings: List[Finding] = []
+    # telemetry=True variants prove the RoundTelemetry carry leaves —
+    # declared replicated (P()) like last_sync — really are shard-
+    # invariant: counters from the replicated full-width draw, gauges
+    # psum'd over the client axis before entering the row
     for name in ("scarlet", "mean"):
-        cfg = FLConfig(n_clients=n_clients, rounds=1, public_size=32,
-                       public_per_round=8, n_classes=4, seed=0)
-        eng = ShardedFederatedDistillation(cfg, STRATEGIES[name](),
-                                           mesh=mesh)
-        fn, abstract = eng.carry_update_fn()
-        findings.extend(check_shard_map_fn(
-            fn, abstract, subject_prefix=f"engine[{name}]:"))
+        for telemetry in (False, True):
+            cfg = FLConfig(n_clients=n_clients, rounds=1, public_size=32,
+                           public_per_round=8, n_classes=4, seed=0,
+                           telemetry=telemetry)
+            eng = ShardedFederatedDistillation(cfg, STRATEGIES[name](),
+                                               mesh=mesh)
+            fn, abstract = eng.carry_update_fn()
+            label = name + ("+telemetry" if telemetry else "")
+            findings.extend(check_shard_map_fn(
+                fn, abstract, subject_prefix=f"engine[{label}]:"))
     return findings
 
 

@@ -38,6 +38,7 @@ def run_method(
     downlink_codec: Optional[str] = None,
     cohorts: Optional[Sequence[CohortSpec]] = None,
     fused_round: Optional[bool] = None,
+    telemetry: Optional[bool] = None,
     **strategy_kw,
 ) -> History:
     """Run one FL method end-to-end and return its History.
@@ -79,6 +80,14 @@ def run_method(
     masked aggregation + sharpening in one Pallas kernel.  The host
     engine ignores it — it is the per-op reference the fused path is
     validated against.
+
+    ``telemetry`` (shorthand for ``FLConfig.telemetry``) opts the run
+    into device-plane telemetry (:mod:`repro.obs`): the returned
+    ``History.telemetry`` holds one
+    :class:`~repro.obs.device.RoundTelemetry` row per round (cache
+    hit/miss census, staleness, payload bytes, entropy/beta gauges),
+    accumulated inside the compiled round body on every engine.  The
+    baselines reject it — there is no distillation round to instrument.
     """
     if engine not in _ENGINES:
         raise ValueError(f"unknown engine: {engine!r} "
@@ -91,6 +100,8 @@ def run_method(
         cfg = dataclasses.replace(cfg, cohorts=tuple(cohorts))
     if fused_round is not None:
         cfg = dataclasses.replace(cfg, fused_round=fused_round)
+    if telemetry is not None:
+        cfg = dataclasses.replace(cfg, telemetry=telemetry)
     if method in ("fedavg", "individual"):
         if cfg.cohorts:
             raise ValueError(
@@ -106,6 +117,10 @@ def run_method(
         if cfg.uplink_codec != "identity" or cfg.downlink_codec != "identity":
             raise ValueError(f"{method} exchanges parameters, not "
                              "soft-labels; codecs do not apply")
+        if cfg.telemetry:
+            raise ValueError(f"{method} has no distillation round to "
+                             "instrument; telemetry applies to "
+                             "distillation-based methods only")
         cls = FedAvg if method == "fedavg" else Individual
         return cls(cfg).run(rounds)
     strat = STRATEGIES[method](**strategy_kw)

@@ -58,3 +58,11 @@ class FLConfig:
     # cache_delta[+quantN]).  The host engine ignores the flag — it is
     # the per-op reference the fused path is validated against.
     fused_round: bool = False
+    # opt-in device-plane telemetry (repro.obs): accumulate a
+    # RoundTelemetry pytree (cache hit/miss census, participation and
+    # staleness counters, payload bytes, teacher-entropy/beta gauges)
+    # inside the round body of every engine.  Rides the lax.scan carry
+    # on the device engines, so the run stays one XLA program with no
+    # host callbacks.  Off (the default) leaves every engine's program
+    # and golden ledger byte-identical to a build without the feature.
+    telemetry: bool = False

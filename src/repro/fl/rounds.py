@@ -39,6 +39,7 @@ import numpy as np
 from repro.compress import get_codec
 from repro.core import cache as cache_lib
 from repro.core import comm as comm_lib
+from repro.obs import device as obs_device
 from repro.data.synthetic import dirichlet_partition, make_public_private, pad_client_shards
 from repro.fl.cohorts import ClientModels, resolve_cohorts
 from repro.fl.config import FLConfig
@@ -170,9 +171,14 @@ class History:
     ledger: comm_lib.CommLedger = field(default_factory=comm_lib.CommLedger)
     final_server_acc: float = 0.0
     final_client_acc: float = 0.0
+    # per-round device-plane telemetry (repro.obs.device.TelemetryLog)
+    # when the run had FLConfig.telemetry on; None otherwise.  Not part
+    # of state_dict: telemetry is a per-run-leg observation, like the
+    # ledger.
+    telemetry: Optional[obs_device.TelemetryLog] = None
 
     def as_dict(self) -> Dict[str, Any]:
-        return {
+        out = {
             "rounds": self.rounds,
             "server_acc": self.server_acc,
             "client_acc": self.client_acc,
@@ -184,6 +190,9 @@ class History:
             "final_server_acc": self.final_server_acc,
             "final_client_acc": self.final_client_acc,
         }
+        if self.telemetry is not None:
+            out["telemetry"] = self.telemetry.as_dict()
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -251,6 +260,13 @@ class FederatedDistillation:
         self.rng = np.random.default_rng(cfg.seed)
         self.rng_idx = np.random.default_rng([cfg.seed, 17])
         self.rng_part = np.random.default_rng([cfg.seed, 29])
+        # device-plane telemetry (repro.obs): per-round counters/gauges
+        # appended to History.telemetry.  telemetry_hook is an optional
+        # pure-jnp transform (tel, t) -> tel applied inside the round
+        # body — it must be scan-safe; repro.analysis flags hooks that
+        # smuggle host callbacks into the compiled round.
+        self._telemetry = bool(cfg.telemetry)
+        self.telemetry_hook = None
         self._setup()
 
     # ------------------------------------------------------------------
@@ -341,6 +357,8 @@ class FederatedDistillation:
         """
         c = self.cfg
         hist = History()
+        if self._telemetry:
+            hist.telemetry = obs_device.TelemetryLog()
         T = rounds or c.rounds
         t_end = self.t_done + T
         for t in range(self.t_done + 1, t_end + 1):
@@ -501,6 +519,57 @@ class FederatedDistillation:
         return part, idx
 
     # ------------------------------------------------------------------
+    def _telemetry_row(self, *, t, part_full, miss, base_present, z_tx,
+                       z_srv, fresh, last_sync, uplink, downlink, catch_up,
+                       axis_name: Optional[str] = None,
+                       part_local=None) -> obs_device.RoundTelemetry:
+        """One :class:`repro.obs.device.RoundTelemetry` row.
+
+        Shared by all three engines — the single expression is what
+        makes the counter stacks byte-equal by construction.  Integer
+        counters derive from the REPLICATED full-width inputs
+        (``part_full``, the pre-update ``miss``/``base_present``/
+        ``last_sync``); participant-mean gauges use the (possibly
+        shard-local) ``z``/``part_local`` with a psum over
+        ``axis_name`` on the sharded engine.  ``z_tx`` is the stack as
+        transmitted, ``z_srv`` the server's post-uplink-codec view,
+        ``fresh`` the aggregated teacher after sharpening and the
+        downlink codec.
+        """
+        part_f = jnp.asarray(
+            part_local if part_local is not None else part_full,
+            jnp.float32)
+        n_part = jnp.sum(jnp.asarray(part_full, jnp.float32))
+        hits, new, expired = obs_device.cache_signal_counts(
+            base_present, miss)
+        if self.codec_up.is_identity:
+            cerr = jnp.float32(0.0)
+        else:
+            cerr = obs_device.codec_error_mean(z_srv, z_tx, part_f, n_part,
+                                               axis_name=axis_name)
+        zbar = obs_device.participant_mean(z_srv, part_f, n_part,
+                                           axis_name=axis_name)
+        tel = obs_device.RoundTelemetry(
+            participants=obs_device.participants_per_cohort(
+                part_full, self.models.offsets, self.models.sizes),
+            cache_hits=hits, cache_miss_new=new, cache_expired=expired,
+            catch_up_clients=obs_device.returning_client_count(
+                part_full, last_sync, t),
+            staleness_hist=obs_device.staleness_histogram(
+                part_full, last_sync, t),
+            uplink_bytes=jnp.asarray(uplink, jnp.float32),
+            downlink_bytes=jnp.asarray(downlink, jnp.float32),
+            catch_up_bytes=jnp.asarray(catch_up, jnp.float32),
+            teacher_entropy_pre=obs_device.mean_entropy(zbar),
+            teacher_entropy_post=obs_device.mean_entropy(fresh),
+            beta=jnp.asarray(self.strategy.sharpen_gauge(zbar, t),
+                             jnp.float32),
+            codec_quant_error=cerr)
+        if self.telemetry_hook is not None:
+            tel = self.telemetry_hook(tel, t)
+        return tel
+
+    # ------------------------------------------------------------------
     def _round(self, t: int, hist: History) -> None:
         c, s = self.cfg, self.strategy
         K = c.n_clients
@@ -510,6 +579,9 @@ class FederatedDistillation:
 
         if n_part == 0:  # total outage: nothing moves, the cache ages
             hist.ledger.record(comm_lib.RoundCost(0.0, 0.0))
+            if self._telemetry:  # all-zero row, matching the device
+                # engines' gated (zeroed) telemetry on outage rounds
+                hist.telemetry.append(obs_device.zeros(self.models.n_cohorts))
             return
         part_j = jnp.asarray(part)
 
@@ -550,6 +622,8 @@ class FederatedDistillation:
                                    strat_base.TRANSMIT_SALT)
                 if self.rng_backend == "jax" else None)
         z_all = s.transmit(z_all, tkey)
+        z_tx = z_all  # as transmitted (pre uplink codec): telemetry's
+        # reference for the codec quantization-error gauge
         if not self.codec_up.is_identity:  # lossy wire: what the server sees
             z_all = self.codec_up.roundtrip(z_all, base=base,
                                             present=base_present)
@@ -645,6 +719,13 @@ class FederatedDistillation:
             downlink_codec=self.codec_down,
         )
         hist.ledger.record(cost)
+        if self._telemetry:
+            hist.telemetry.append(self._telemetry_row(
+                t=t, part_full=part_j, miss=miss, base_present=base_present,
+                z_tx=z_tx, z_srv=z_all, fresh=fresh,
+                last_sync=jnp.asarray(self.last_sync, jnp.int32),
+                uplink=cost.uplink, downlink=cost.downlink,
+                catch_up=catch_up))
         self.last_sync[part] = t
 
     # ------------------------------------------------------------------

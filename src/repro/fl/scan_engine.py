@@ -38,6 +38,7 @@ import numpy as np
 from repro.core import cache as cache_lib
 from repro.core import comm as comm_lib
 from repro.kernels import round_kernel
+from repro.obs import device as obs_device
 from repro.fl.strategies.base import TRANSMIT_SALT
 from repro.fl.rounds import (
     FederatedDistillation,
@@ -148,6 +149,7 @@ class ScannedFederatedDistillation(FederatedDistillation):
         # per-round transmit key: an extra fold off kt (DCE'd when the
         # strategy ignores it, so the legacy key stream is untouched)
         z_all = s.transmit(z_all, jax.random.fold_in(kt, TRANSMIT_SALT))
+        z_tx = z_all  # as transmitted: telemetry's codec-error reference
         if self._fused:
             # fused fast path: uplink codec round trip + masked
             # aggregation + sharpening in one round_kernel VMEM pass
@@ -218,6 +220,24 @@ class ScannedFederatedDistillation(FederatedDistillation):
         downlink = jnp.where(any_p, downlink, 0.0)
         last_sync = jnp.where(part, t, carry["last_sync"])
 
+        # --- device-plane telemetry (pre-update last_sync; whole row
+        # gated so outage rounds match the host loop's zero row) -----------
+        tel = None
+        if self._telemetry:
+            # the fused path never materializes the server's decoded
+            # view, so telemetry round-trips the transmitted stack
+            # itself (an opt-in observation cost, off the fused path's
+            # critical per-op chain)
+            z_srv = z_all
+            if self._fused and not self.codec_up.is_identity:
+                z_srv = self.codec_up.roundtrip(z_tx, base=base,
+                                                present=base_present)
+            tel = obs_device.gate(self._telemetry_row(
+                t=t, part_full=part, miss=miss, base_present=base_present,
+                z_tx=z_tx, z_srv=z_srv, fresh=fresh,
+                last_sync=carry["last_sync"], uplink=uplink,
+                downlink=downlink, catch_up=catch_up), any_p)
+
         # --- eval (only on scheduled rounds; lax.cond skips the rest) ------
         def _eval():
             sa = accuracy(server_params, self.x_test, self.y_test,
@@ -254,15 +274,25 @@ class ScannedFederatedDistillation(FederatedDistillation):
         ys = dict(uplink=uplink, downlink=downlink,
                   server_acc=sa, client_acc=ca, server_val=sv, client_val=cv,
                   cohort_acc=cacc, have_tv=have_tv)
+        if tel is not None:
+            # per-round row out through ys, running totals in the carry
+            new_carry["telemetry"] = obs_device.accumulate(
+                carry["telemetry"], tel)
+            ys["telemetry"] = tel
         return new_carry, ys
 
     # ------------------------------------------------------------------
     def _initial_carry(self):
         """The scan carry is exactly the checkpointable engine state
         (same placeholders, same ``have_*`` flags) minus the host-side
-        round counter — one source of truth for both."""
+        round counter — one source of truth for both.  Telemetry-on
+        runs additionally carry the running RoundTelemetry totals (not
+        checkpointable state: telemetry is a per-run-leg observation,
+        zeroed at every run())."""
         carry = self.state_dict()
         del carry["t_done"]
+        if self._telemetry:
+            carry["telemetry"] = obs_device.zeros(self.models.n_cohorts)
         return carry
 
     # ------------------------------------------------------------------
@@ -310,6 +340,13 @@ class ScannedFederatedDistillation(FederatedDistillation):
         return self._program().lower(*self._aot_args(ts, offline, do_eval))
 
     def _finish_run(self, carry, ys, eval_np, t0) -> History:
+        # telemetry leaves first: they are observation outputs, not
+        # engine state (the carry totals are redundant with the stack
+        # and exist to prove the accumulate path; the stack is the record)
+        carry, ys = dict(carry), dict(ys)
+        carry.pop("telemetry", None)
+        tel_stack = ys.pop("telemetry", None)
+
         # persist final device state (parity checks, chained run() calls)
         self.client_params = carry["client_params"]
         self.server_params = carry["server_params"]
@@ -333,6 +370,8 @@ class ScannedFederatedDistillation(FederatedDistillation):
         have_tv = np.asarray(ys["have_tv"])
 
         hist = History()
+        if tel_stack is not None:
+            hist.telemetry = obs_device.TelemetryLog.from_stacked(tel_stack)
         for u, d in zip(up, down):
             hist.ledger.record(comm_lib.RoundCost(float(u), float(d)))
         for i in np.nonzero(eval_np)[0]:

@@ -64,6 +64,7 @@ except ImportError:  # pragma: no cover - version-dependent import path
 
 from repro.core import cache as cache_lib
 from repro.core import comm as comm_lib
+from repro.obs import device as obs_device
 from repro.fl.rounds import (
     _select_cohorts,
     accuracy,
@@ -198,6 +199,12 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
             client_params=cax, server_params=rep, cache=rep,
             prev_teacher=rep, prev_idx=rep, have_prev=rep,
             teacher_val=rep, have_tv=rep, last_sync=rep)
+        if self._telemetry:
+            # telemetry counters derive from replicated inputs (and the
+            # participant-mean gauges psum over the client axis before
+            # entering the row), so the whole pytree stays replicated —
+            # the replication checker proves it (repro.analysis)
+            carry["telemetry"] = rep
         consts = dict(
             xs=cax, ys=cax, train_mask=cax, xts=cax, yts=cax, tmask=cax,
             val_mask=cax, x_pub=rep, x_test=rep, y_test=rep, x_pub_val=rep)
@@ -292,6 +299,7 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
         # per-round transmit key, replicated across shards (same fold on
         # every shard; DCE'd when the strategy ignores it)
         z_all = s.transmit(z_all, jax.random.fold_in(kt, TRANSMIT_SALT))
+        z_tx = z_all  # as transmitted: telemetry's codec-error reference
         if self._fused:
             # fused fast path: codec round trip + linear moments in one
             # round_kernel pass per shard; the psum + finalize
@@ -371,6 +379,22 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
         downlink = jnp.where(any_p, downlink, 0.0)
         last_sync = jnp.where(part_full, t, carry["last_sync"])
 
+        # --- device-plane telemetry: counters from the replicated
+        # full-width draw/last_sync, gauges from the shard-local stack
+        # psum'd over the client axis inside _telemetry_row ----------------
+        tel = None
+        if self._telemetry:
+            z_srv = z_all
+            if self._fused and not self.codec_up.is_identity:
+                z_srv = self.codec_up.roundtrip(z_tx, base=base,
+                                                present=base_present)
+            tel = obs_device.gate(self._telemetry_row(
+                t=t, part_full=part_full, miss=miss,
+                base_present=base_present, z_tx=z_tx, z_srv=z_srv,
+                fresh=fresh, last_sync=carry["last_sync"], uplink=uplink,
+                downlink=downlink, catch_up=catch_up,
+                axis_name=CLIENT_AXIS, part_local=part_f), any_p)
+
         # --- eval: shard-local per-cohort partial sums under the cond,
         # psum outside (collectives stay unconditional; do_eval is
         # replicated) -----------------------------------------------------
@@ -412,6 +436,10 @@ class ShardedFederatedDistillation(ScannedFederatedDistillation):
         ys = dict(uplink=uplink, downlink=downlink,
                   server_acc=sa, client_acc=ca, server_val=sv, client_val=cv,
                   cohort_acc=cacc, have_tv=have_tv)
+        if tel is not None:
+            new_carry["telemetry"] = obs_device.accumulate(
+                carry["telemetry"], tel)
+            ys["telemetry"] = tel
         return new_carry, ys
 
     # ------------------------------------------------------------------

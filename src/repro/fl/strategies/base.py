@@ -76,6 +76,15 @@ class Strategy:
     def aggregate(self, z_clients, upload_mask, t) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
         raise NotImplementedError
 
+    # telemetry gauge (repro.obs): the resolved sharpening knob for
+    # round ``t`` given the participant-mean soft labels ``zbar`` —
+    # Enhanced ERA reports its (possibly adaptive) beta, ERA its
+    # temperature, strategies without a sharpener report 0.  Must be
+    # pure jnp (it runs inside the scanned round body when telemetry is
+    # on) and must not mutate state: it is an observation, not a hook.
+    def sharpen_gauge(self, zbar: jnp.ndarray, t) -> jnp.ndarray:
+        return jnp.float32(0.0)
+
     # ------------------------------------------------------------------
     # Fixed-shape masked aggregation: the two-phase contract.
     #

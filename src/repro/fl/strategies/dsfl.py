@@ -19,6 +19,9 @@ class ERAStrategy(Strategy):
     def aggregate(self, z, um, t):
         return era_lib.era(jnp.mean(z, axis=0), self.opts.get("T", 0.1)), None
 
+    def sharpen_gauge(self, zbar, t):
+        return jnp.float32(self.opts.get("T", 0.1))
+
     # Two-phase contract: linear phase inherited (weighted sum); the
     # temperature softmax runs once on the reduced mean.
     def finalize_aggregate(self, partials, t):

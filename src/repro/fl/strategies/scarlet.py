@@ -41,6 +41,12 @@ class EnhancedERAStrategy(Strategy):
         h_norm = jnp.mean(era_lib.entropy(zbar)) / jnp.log(n)
         return 1.0 + (self.opts.get("beta_max", 2.5) - 1.0) * h_norm
 
+    def sharpen_gauge(self, zbar, t):
+        beta = self.opts.get("beta", 1.5)
+        if beta == "adaptive":
+            return jnp.asarray(self._adaptive_beta(zbar), jnp.float32)
+        return jnp.float32(beta)
+
     def aggregate(self, z, um, t):
         beta = self.opts.get("beta", 1.5)
         if beta == "adaptive":

@@ -21,7 +21,6 @@ Usage:
 import argparse
 import json
 import sys
-import time
 import traceback
 from typing import Any, Dict
 
@@ -38,6 +37,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs
 from repro.models import common as cm
 from repro.models import registry
+from repro.obs.trace import now as _now
 from repro.optim import get as get_opt
 
 import contextlib
@@ -197,7 +197,7 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool, scheme: str,
             print(f"[SKIP] {arch} x {shape_name}: {result['reason']}")
         return result
 
-    t0 = time.time()
+    t0 = _now()
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
         chips = int(np.prod(mesh.devices.shape))
@@ -218,7 +218,7 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool, scheme: str,
             # multi-pod pass: compile proof + memory plan only (the
             # roofline table is single-pod per the experiment plan)
             result["status"] = "ok"
-            result["compile_s"] = time.time() - t0
+            result["compile_s"] = _now() - t0
             result["bytes_per_device"] = bytes_per_device
             result["memory_analysis"] = {
                 k: float(getattr(mem, k, 0)) for k in (
@@ -295,7 +295,7 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool, scheme: str,
         )
         result.update(roof.as_dict())
         result["status"] = "ok"
-        result["compile_s"] = time.time() - t0
+        result["compile_s"] = _now() - t0
         result["memory_analysis"] = {
             k: float(getattr(mem, k, 0)) for k in (
                 "argument_size_in_bytes", "output_size_in_bytes",
@@ -319,7 +319,7 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool, scheme: str,
         result["status"] = "error"
         result["error"] = f"{type(e).__name__}: {e}"
         result["traceback"] = traceback.format_exc()[-2000:]
-        result["compile_s"] = time.time() - t0
+        result["compile_s"] = _now() - t0
         if verbose:
             print(f"[FAIL] {arch} x {shape_name} ({mesh_name}, {scheme}): "
                   f"{result['error']}")

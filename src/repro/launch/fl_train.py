@@ -5,15 +5,19 @@
 
 Runs any implemented method with exact communication accounting and
 writes a JSON history (accuracy vs cumulative bytes) for analysis.
+``--telemetry`` additionally records device-plane round telemetry
+(:mod:`repro.obs`) into the history and exports the host-plane span
+trace as a Perfetto-loadable ``*.trace.json`` sibling.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import time
 
 from repro.fl.engine import FLConfig, run_method
+from repro.obs import SpanTracer
+from repro.obs import export as obs_export
 
 METHOD_DEFAULTS = {
     "scarlet": dict(cache_duration=50, beta=1.5),
@@ -39,6 +43,9 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=None)
     ap.add_argument("--use-cache", action="store_true",
                     help="plug the soft-label cache into a non-SCARLET method")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record device-plane round telemetry (repro.obs) "
+                         "and export the span trace")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="experiments/fl_runs")
     args = ap.parse_args()
@@ -60,10 +67,14 @@ def main() -> None:
     if args.use_cache:
         kw["use_cache"] = True
         kw.setdefault("cache_duration", 25)
+    if args.telemetry:
+        kw["telemetry"] = True
 
-    t0 = time.time()
-    hist = run_method(args.method, cfg, **kw)
-    dt = time.time() - t0
+    # monotonic span clock (obs.trace.now — never jumps on NTP/DST)
+    tracer = SpanTracer("fl_train", meta={"method": args.method})
+    with tracer.span("run", method=args.method, rounds=args.rounds) as sp:
+        hist = run_method(args.method, cfg, **kw)
+    dt = sp.dur_s
     s = hist.ledger.summary()
     print(f"{args.method}: server_acc={hist.final_server_acc:.3f} "
           f"client_acc={hist.final_client_acc:.3f} "
@@ -75,8 +86,13 @@ def main() -> None:
     with open(os.path.join(args.out, fname), "w") as f:
         json.dump({"config": cfg.__dict__, "method": args.method,
                    "strategy_kwargs": {k: v for k, v in kw.items()},
-                   "history": hist.as_dict(), "wall_s": dt}, f, indent=2)
+                   "history": hist.as_dict(), "wall_s": dt,
+                   "spans": tracer.jsonl_lines()}, f, indent=2)
     print(f"history -> {os.path.join(args.out, fname)}")
+    if args.telemetry:
+        tpath = os.path.join(args.out, fname[:-5] + ".trace.json")
+        obs_export.write_chrome_trace(tpath, tracer)
+        print(f"trace -> {tpath}")
 
 
 if __name__ == "__main__":

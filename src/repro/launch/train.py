@@ -9,7 +9,6 @@ pjit on a real mesh (the dry-run lowers exactly this step).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +17,7 @@ import numpy as np
 from repro.checkpoint import save_pytree
 from repro.configs.registry import ARCHS, ASSIGNED
 from repro.models import registry
+from repro.obs.trace import now as _now
 from repro.optim import get as get_opt
 
 
@@ -69,7 +69,7 @@ def main() -> None:
 
     stream = token_stream(cfg.vocab_size, args.batch, args.seq, seed=1)
     losses = []
-    t0 = time.time()
+    t0 = _now()
     for step in range(args.steps):
         batch = next(stream)
         if cfg.family == "vlm":
@@ -81,7 +81,7 @@ def main() -> None:
         loss, params, opt_state = train_step(params, opt_state, batch)
         losses.append(float(loss))
         if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
-            tok_s = args.batch * args.seq * (step + 1) / (time.time() - t0)
+            tok_s = args.batch * args.seq * (step + 1) / (_now() - t0)
             print(f"step {step:5d}  loss {losses[-1]:.4f}  {tok_s:.0f} tok/s")
     first, last = np.mean(losses[:10]), np.mean(losses[-10:])
     print(f"loss {first:.4f} -> {last:.4f} "

@@ -1,0 +1,41 @@
+"""Run telemetry: device-resident round metrics + host-plane tracing.
+
+Two planes, deliberately separate:
+
+- **Device plane** (:mod:`repro.obs.device`): the ``RoundTelemetry``
+  pytree the FL engines accumulate *inside* the compiled round body —
+  cache hit/miss census, participation and staleness counters, payload
+  bytes, teacher-entropy and sharpening gauges.  Opt-in via
+  ``FLConfig.telemetry`` / ``run_method(telemetry=...)``; rides the
+  ``lax.scan`` carry, so the whole run stays one XLA program with no
+  host callbacks.
+- **Host plane** (:mod:`repro.obs.trace` / ``export`` / ``report``):
+  monotonic span tracing around compile/run/eval blocks, Chrome-trace
+  (Perfetto) + JSONL exporters, run records, and the
+  ``python -m repro.obs`` renderer/validator.
+
+Importing ``repro.obs`` (or ``repro.obs.trace``) never imports jax:
+launch scripts route their clocks through :func:`now` before they set
+``XLA_FLAGS``.  Device-plane names are re-exported lazily.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.obs.trace import Span, SpanTracer, now, profiler_trace
+
+__all__ = [
+    "now", "Span", "SpanTracer", "profiler_trace",
+    # lazy (jax-importing) device-plane names
+    "RoundTelemetry", "TelemetryLog",
+]
+
+_DEVICE_NAMES = ("RoundTelemetry", "TelemetryLog")
+
+
+def __getattr__(name: str) -> Any:
+    if name in _DEVICE_NAMES:
+        from repro.obs import device
+
+        return getattr(device, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

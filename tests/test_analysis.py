@@ -134,6 +134,26 @@ def test_broken_kernel_flagged(label, fn, args, want):
         + "\n".join(str(f) for f in got))
 
 
+@pytest.mark.slow
+def test_repo_obs_pass_clean():
+    from repro.analysis import obs_checks
+
+    findings = obs_checks.run()
+    errs = [f for f in findings if f.level == "error"]
+    assert not errs, "\n".join(str(f) for f in errs)
+    assert any("structurally additive" in f.message for f in findings)
+
+
+def test_telemetry_callback_hook_flagged():
+    from repro.analysis import obs_checks
+
+    got = obs_checks.check_round_body(
+        "fixture/telemetry-callback", fixtures.telemetry_callback_engine())
+    errs = [f for f in got if f.level == "error"]
+    assert errs, "debug_callback-smuggling telemetry hook not flagged"
+    assert any("callback" in f.message for f in errs)
+
+
 def test_broken_carry_flagged_fixed_carry_clean():
     from repro.analysis import replication_checks
 

@@ -1,0 +1,86 @@
+"""Unit tests for ``repro.launch.perf.variant_plan`` — the perf-sweep
+variant table that maps a variant name to (sharding scheme, config
+overrides, MoE dispatch spec, MoE all-to-all flag).
+
+``repro.launch.perf`` mutates ``XLA_FLAGS`` at import time (it forces
+512 host devices for the sweep); the import is wrapped so the rest of
+the suite keeps its own flags.
+"""
+import os
+
+import pytest
+
+
+def _variant_plan():
+    saved = os.environ.get("XLA_FLAGS")
+    try:
+        from repro.launch.perf import variant_plan
+    finally:
+        if saved is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = saved
+    return variant_plan
+
+
+EP_SPEC = ("data", None, "model")
+
+# name -> (scheme, overrides, moe_spec(is_moe), moe_spec(dense), a2a)
+TABLE = {
+    "ep-a2a": ("ep", {}, None, None, True),
+    "baseline-tp": ("tp", {}, None, None, False),
+    "tp-ep": ("tp", {}, EP_SPEC, EP_SPEC, False),
+    "tp-dots-remat": ("tp", {"remat_policy": "dots_saveable"},
+                      None, None, False),
+    "tp-lse-ce": ("tp", {"ce_impl": "lse"}, None, None, False),
+    "tp-bf16logits": ("tp", {"fp32_logits": False, "ce_impl": "lse"},
+                      None, None, False),
+    "tp-bf16attn": ("tp", {"attn_f32": False}, None, None, False),
+    "tp-all": ("tp", {"remat_policy": "dots_saveable", "ce_impl": "lse",
+                      "attn_f32": False}, EP_SPEC, None, False),
+    "fsdp": ("fsdp", {}, None, None, False),
+    "fsdp-bf16logits": ("fsdp", {"fp32_logits": False}, None, None, False),
+    "fsdp-dots-remat": ("fsdp", {"remat_policy": "dots_saveable"},
+                        None, None, False),
+    "fsdp-ep": ("fsdp", {}, EP_SPEC, EP_SPEC, False),
+    "fsdp-all": ("fsdp", {"fp32_logits": False,
+                          "remat_policy": "dots_saveable"},
+                 EP_SPEC, None, False),
+}
+
+
+@pytest.mark.parametrize("name", sorted(TABLE))
+@pytest.mark.parametrize("is_moe", (True, False), ids=("moe", "dense"))
+def test_variant_plan_table(name, is_moe):
+    variant_plan = _variant_plan()
+    scheme, overrides, moe_wanted, dense_wanted, a2a = TABLE[name]
+    got = variant_plan(name, is_moe)
+    assert got == (scheme, overrides,
+                   moe_wanted if is_moe else dense_wanted, a2a)
+
+
+def test_variant_plan_overrides_are_fresh_objects():
+    """Mutating one call's overrides must not leak into the next (the
+    sweep loop feeds them into dryrun.run_combo as-is)."""
+    variant_plan = _variant_plan()
+    a = variant_plan("fsdp-all", True)[1]
+    a["remat_policy"] = "mutated"
+    assert variant_plan("fsdp-all", True)[1]["remat_policy"] == \
+        "dots_saveable"
+
+
+def test_variant_plan_unknown_name_raises():
+    variant_plan = _variant_plan()
+    with pytest.raises(ValueError, match="no-such-variant"):
+        variant_plan("no-such-variant", False)
+
+
+def test_variant_plan_ep_only_gated_on_all_variants():
+    """The *-all variants attach the expert-parallel dispatch spec only
+    for MoE archs; the explicit *-ep variants always attach it."""
+    variant_plan = _variant_plan()
+    for name in ("tp-all", "fsdp-all"):
+        assert variant_plan(name, True)[2] == EP_SPEC
+        assert variant_plan(name, False)[2] is None
+    for name in ("tp-ep", "fsdp-ep"):
+        assert variant_plan(name, False)[2] == EP_SPEC

@@ -1,0 +1,136 @@
+"""Telemetry conformance: host x scan x shard emit the SAME telemetry.
+
+The round counters are computed from the replicated full-width
+participation draw with one shared expression
+(``FederatedDistillation._telemetry_row``), so across engines they are
+not merely close — the integer counters and exact byte tallies must be
+**byte-equal stacks**.  The float gauges (teacher entropy, beta, codec
+quantization error) reduce over clients in different orders (host
+einsum vs scan tensordot vs shard psum), so they get allclose.
+
+Also pinned here:
+
+- the cache-signal partition invariant: every distilled row is exactly
+  one of hit / new miss / expired miss, so the three counters sum to
+  ``active_rounds * public_per_round``;
+- telemetry **on** does not move the ledger: a telemetry-on scan run at
+  the golden config must reproduce the committed golden-ledger bytes
+  (no new golden fixtures — the existing files are the contract);
+- telemetry **off** leaves ``History.telemetry`` None (and the golden
+  tests in ``test_golden_ledgers.py`` keep pinning the off-path bytes).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.fl import (
+    FLConfig,
+    Outage,
+    Scenario,
+    bernoulli_participation,
+    fixed_fraction,
+    run_method,
+)
+from repro.obs.device import EXACT_FIELDS, GAUGE_FIELDS
+from test_golden_ledgers import CFG as GOLDEN_CFG
+from test_golden_ledgers import GOLDEN_DIR, METHOD_KW
+
+CFG = FLConfig(
+    n_clients=4, n_classes=4, dim=8, rounds=4, local_steps=2,
+    distill_steps=2, public_size=48, public_per_round=10,
+    private_size=64, alpha=0.5, eval_every=2, seed=0, hidden=12,
+    mesh_spec="2x4", telemetry=True,
+)
+
+STRATEGY_KW = {
+    "scarlet": dict(cache_duration=3, beta=1.5),
+    # dsfl with the cache plugged in so its cells exercise hit/expiry
+    # counters too (dsfl alone never populates the cache)
+    "dsfl": dict(T=0.1, use_cache=True, cache_duration=3),
+}
+
+PARTICIPATIONS = {
+    "bernoulli": Scenario(participation=bernoulli_participation(0.5)),
+    # outage windows: zero-participant rounds (gated telemetry rows) and
+    # returning stragglers (catch-up counters + staleness tail)
+    "outage": Scenario(participation=fixed_fraction(0.5),
+                       outages=(Outage(1, 2, 3),)),
+}
+
+CODECS = ("identity", "cache_delta+quant8")
+
+MATRIX = [(s, p, c) for s in sorted(STRATEGY_KW)
+          for p in sorted(PARTICIPATIONS) for c in CODECS]
+
+
+def _run(engine, strategy, scenario, codec, **extra):
+    kw = dict(STRATEGY_KW[strategy])
+    kw.update(extra)
+    return run_method(strategy, CFG, engine=engine, codec=codec,
+                      scenario=scenario, **kw)
+
+
+@pytest.mark.parametrize("strategy,part,codec", MATRIX,
+                         ids=[f"{s}-{p}-{c}" for s, p, c in MATRIX])
+def test_three_engine_telemetry_parity(strategy, part, codec):
+    scenario = PARTICIPATIONS[part]
+    host = _run("host", strategy, scenario, codec, rng_backend="jax")
+    scan = _run("scan", strategy, scenario, codec)
+    shard = _run("shard", strategy, scenario, codec)
+
+    stacks = {n: h.telemetry.stacks()
+              for n, h in (("host", host), ("scan", scan), ("shard", shard))}
+    for field in EXACT_FIELDS:
+        ref = stacks["host"][field]
+        for other in ("scan", "shard"):
+            assert np.array_equal(ref, stacks[other][field]), (
+                f"{field}: host vs {other} counter stacks diverged\n"
+                f"host={ref}\n{other}={stacks[other][field]}")
+    for field in GAUGE_FIELDS:
+        ref = stacks["host"][field]
+        for other in ("scan", "shard"):
+            np.testing.assert_allclose(
+                stacks[other][field], ref, atol=1e-5, rtol=1e-5,
+                err_msg=f"{field}: host vs {other} gauge stacks diverged")
+
+    # partition invariant: each distilled row is exactly one cache signal
+    s = scan.telemetry.summary()
+    assert (s["cache_hits"] + s["cache_miss_new"] + s["cache_expired"]
+            == s["active_rounds"] * CFG.public_per_round)
+    # and the byte counters must reproduce the ledger's totals exactly
+    led = scan.ledger.summary()
+    assert s["uplink_bytes"] == pytest.approx(
+        led["uplink_mean"] * led["rounds"], rel=1e-6)
+
+
+@pytest.mark.parametrize("method,codec",
+                         [(m, c) for m in ("scarlet", "dsfl")
+                          for c in ("identity", "quant8")],
+                         ids=lambda v: str(v))
+def test_telemetry_on_ledger_matches_golden(method, codec):
+    """Turning telemetry ON may not move a single ledger byte: the scan
+    run at the golden config must still reproduce the committed fixture
+    (the structural half of this guarantee is proven statically by
+    ``repro.analysis`` pass 4)."""
+    h = run_method(
+        method, GOLDEN_CFG, engine="scan", codec=codec, telemetry=True,
+        scenario=Scenario(participation=bernoulli_participation(0.5)),
+        **METHOD_KW[method])
+    text = json.dumps(h.ledger.summary(), sort_keys=True, indent=2) + "\n"
+    golden = (GOLDEN_DIR / f"{method}-{codec}.json").read_text()
+    assert golden == text, (
+        f"telemetry=True perturbed the {method}-{codec} golden ledger")
+    assert h.telemetry is not None and h.telemetry.summary()["rounds"] == 4
+
+
+def test_telemetry_off_history_has_no_log():
+    h = run_method("scarlet", GOLDEN_CFG, engine="scan",
+                   **METHOD_KW["scarlet"])
+    assert h.telemetry is None
+    assert "telemetry" not in h.as_dict()
+
+
+def test_baseline_methods_reject_telemetry():
+    with pytest.raises(ValueError, match="telemetry"):
+        run_method("fedavg", GOLDEN_CFG, telemetry=True)
