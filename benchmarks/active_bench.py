@@ -1,0 +1,102 @@
+"""Active-set engine scaling: million-client rounds, O(m) device state.
+
+One sweep over the population size K with a **fixed active set** m
+(``fixed_fraction(m/K)``): per-round wall time, rounds/sec, live
+device bytes, and host store bytes per K.  The claim under test is the
+active engine's whole reason to exist — at K = 10^6 the model state on
+device is the gathered ``(m, ...)`` stack plus the O(|P|) cache, so
+device bytes are flat in K up to the few-bytes-per-client bookkeeping
+vector (``last_sync``/participation: ~5 B/client), while the full
+per-client parameter store lives on the host (``store_bytes`` is the
+column that grows linearly).  The largest point runs the ``memmap``
+backing — the configuration that outlives RAM.
+
+Timings use the same recipe as ``engine_bench``: dispatch-bound tiny
+model (1 local step, depth-1 MLP), one warmup round to compile the
+gather-capacity jits, then a timed run.  ``device_bytes`` sums
+``jax.live_arrays()`` after a gc pass — stable standalone and under
+``--only`` lists, approximate if other benchmarks leaked arrays
+earlier in the same process.
+
+``--quick`` keeps two CI-sized points (K = 10^3, 10^4) whose
+``rounds_per_sec`` feeds the perf-regression gate.
+"""
+from __future__ import annotations
+
+import gc
+import tempfile
+import time
+
+from repro.fl import FLConfig, Scenario, fixed_fraction
+from repro.fl.active_engine import ActiveSetFederatedDistillation
+from repro.fl.strategies import STRATEGIES
+
+ACTIVE_M = 64
+ROUNDS = 3
+CLIENT_COUNTS = (10_000, 100_000, 1_000_000)
+MEMMAP_FROM = 1_000_000  # the points that must not assume K fits in RAM
+QUICK_CLIENT_COUNTS = (1_000, 10_000)
+
+
+def _cfg(K: int) -> FLConfig:
+    return FLConfig(
+        n_clients=K, n_classes=10, dim=8, rounds=ROUNDS + 1,
+        local_steps=1, distill_steps=1, public_size=256, public_per_round=64,
+        private_size=2 * K, partition="uniform", hidden=8, mlp_depth=1,
+        eval_every=10**6, seed=0)
+
+
+def _bench_point(K: int, store_dir) -> dict:
+    import jax
+
+    backing = "memmap" if (K >= MEMMAP_FROM and store_dir) else "ram"
+    eng = ActiveSetFederatedDistillation(
+        _cfg(K), STRATEGIES["scarlet"](beta=1.5), cache_duration=3,
+        scenario=Scenario(participation=fixed_fraction(ACTIVE_M / K)),
+        store_backing=backing, store_dir=store_dir)
+    eng.run(1)  # warmup: compile the gather-capacity jits
+    t0 = time.perf_counter()
+    eng.run(ROUNDS)
+    dt = time.perf_counter() - t0
+    gc.collect()
+    device_bytes = sum(a.nbytes for a in jax.live_arrays())
+    store_bytes = eng.store.nbytes
+    row = {
+        "name": f"active/K={K}",
+        "us_per_call": dt / ROUNDS * 1e6,
+        "rounds_per_sec": ROUNDS / dt,
+        "device_bytes": int(device_bytes),
+        "store_bytes": int(store_bytes),
+        "active_m": ACTIVE_M,
+        "backing": backing,
+        "derived": (f"m={ACTIVE_M} dev={device_bytes / 1e6:.1f}MB "
+                    f"store={store_bytes / 1e6:.1f}MB {backing}"),
+    }
+    del eng
+    gc.collect()
+    return row
+
+
+def run(quick: bool = False) -> list:
+    counts = QUICK_CLIENT_COUNTS if quick else CLIENT_COUNTS
+    rows = []
+    with tempfile.TemporaryDirectory(prefix="active_bench_store_") as d:
+        for K in counts:
+            rows.append(_bench_point(K, store_dir=d))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks._common import emit, write_bench
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    print("name,us_per_call,derived")
+    emit(rows)
+    if args.out:
+        write_bench(args.out, "active", rows, quick=args.quick)

@@ -15,6 +15,7 @@ import time
 import traceback
 
 from benchmarks import (
+    active_bench,
     codec_pareto,
     engine_bench,
     engine_roofline,
@@ -49,6 +50,7 @@ SUITE = {
     "fig18": (fig18_convergence_proxy, {"rounds": 80}),
     "kernels": (kernels_bench, {}),
     "engine": (engine_bench, {}),
+    "active": (active_bench, {}),
     "engine_roofline": (engine_roofline, {}),
     "codec_pareto": (codec_pareto, {}),
     "hetero": (hetero_bench, {}),
@@ -63,6 +65,7 @@ BENCH_FILES = {
     "kernels": "kernels",
     "codec_pareto": "codec",
     "engine_roofline": "engine_roofline",
+    "active": "active",
 }
 
 QUICK_ROUNDS = 25

@@ -61,9 +61,10 @@ def main(argv=None) -> int:
     report.extend(jaxpr_checks.run())
     report.extend(pallas_checks.run())
     if not args.fast:
-        from repro.analysis import obs_checks, replication_checks
+        from repro.analysis import active_checks, obs_checks, replication_checks
         report.extend(obs_checks.run())
         report.extend(replication_checks.run())
+        report.extend(active_checks.run())
     print(report.render(verbose=args.verbose))
     if args.json:
         _dump(report, args.json)
@@ -123,6 +124,31 @@ def _selftest(report, fast: bool = False) -> int:
             failures.append("fixture/telemetry-callback")
             report.add("error", "selftest", "fixture/telemetry-callback",
                        "debug_callback-smuggling telemetry hook NOT flagged")
+
+    # active-set fixture: the numerically invisible O(K) leak into the
+    # gathered O(m) client step must be caught by the K-separation pass,
+    # and the real engine must pass (no false positive)
+    if not fast:
+        from repro.analysis import active_checks
+        got = active_checks.check_engine(
+            "fixture/active-k-leak", fixtures.leaky_active_engine())
+        hit = [f for f in got if f.level == "error"]
+        if hit:
+            report.add("ok", "selftest", "fixture/active-k-leak",
+                       f"flagged as expected: {hit[0].message}")
+        else:
+            failures.append("fixture/active-k-leak")
+            report.add("error", "selftest", "fixture/active-k-leak",
+                       "O(K) state leaked into the client step NOT flagged")
+        clean = active_checks.run()
+        bad = [f for f in clean if f.level == "error"]
+        if bad:
+            failures.append("fixture/active-clean")
+            report.add("error", "selftest", "fixture/active-clean",
+                       "real active engine falsely flagged: " + bad[0].message)
+        else:
+            report.add("ok", "selftest", "fixture/active-clean",
+                       "real active engines pass (no false positive)")
 
     # replication fixtures (skipped under --fast: needs the 8-device mesh)
     if not fast:

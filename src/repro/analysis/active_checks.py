@@ -1,0 +1,137 @@
+"""Pass 5: active-set engine contracts (O(m)/O(K) separation).
+
+The active-set engine (:mod:`repro.fl.active_engine`) promises two
+structural properties that nothing at runtime checks:
+
+1. **Scan safety** of both jitted round-body steps — the O(K)
+   bookkeeping step and the O(m) gathered client step must stay free
+   of host callbacks and host RNG.  (They run under ``jax.jit``, not
+   ``lax.scan``, but the same contract is what keeps each round a
+   fixed small number of device launches.)
+2. **K-separation**: the gathered client step's jaxpr must contain
+   **no K-sized array** — neither as an argument nor as a closed-over
+   constant nor as an intermediate.  One leaked ``(K,)`` operand (say,
+   the device ``last_sync`` mirror folded into a cost expression) and
+   the "device memory independent of K" claim is silently void at
+   K = 10^6 while every K = 100 test still passes.  The bookkeeping
+   step, conversely, MUST mention K — tracing the wrong function would
+   otherwise vacuously "prove" the property.
+
+The analysis engine uses a **prime** population (K = 193) so no other
+dimension — public subset, class count, hidden width, power-of-two
+gather capacity — can collide with K and false-positive the scan.
+
+Everything is trace-only (``jax.make_jaxpr`` on shapes): no rounds run.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.report import Finding
+
+# prime, so gather capacities (powers of two), data dims, and public
+# sizes can never equal it by coincidence
+K_ANALYSIS = 193
+
+# (label, strategy, strategy kwargs, engine kwargs, uplink codec):
+# cover cache-on/off and the delta+quant codec path — the cache arrays
+# are O(|P|) and must stay legal inside the client step while the
+# O(K) bookkeeping stays out
+ANALYSIS_VARIANTS = (
+    ("scarlet", "scarlet", {}, {"cache_duration": 2}, "identity"),
+    ("scarlet+cache_delta+quant8", "scarlet", {}, {"cache_duration": 2},
+     "cache_delta+quant8"),
+    ("dsfl", "dsfl", {}, {}, "identity"),
+)
+
+
+def analysis_config(codec: str = "identity"):
+    from repro.fl.config import FLConfig
+
+    return FLConfig(
+        n_clients=K_ANALYSIS, rounds=2, public_size=32, public_per_round=8,
+        n_classes=4, dim=8, hidden=8, private_size=2 * K_ANALYSIS,
+        local_steps=1, distill_steps=1, seed=0, partition="uniform",
+        uplink_codec=codec)
+
+
+def build_engine(strategy: str, strat_kw: dict, eng_kw: dict, codec: str):
+    from repro.fl.active_engine import ActiveSetFederatedDistillation
+    from repro.fl.scenarios import Scenario, bernoulli_participation
+    from repro.fl.strategies import STRATEGIES
+
+    return ActiveSetFederatedDistillation(
+        analysis_config(codec), STRATEGIES[strategy](**strat_kw),
+        scenario=Scenario(participation=bernoulli_participation(0.3)),
+        **eng_kw)
+
+
+def _avals(jaxpr) -> list:
+    """Every aval in the jaxpr: top-level binders + all equation vars,
+    recursing through sub-jaxprs."""
+    from repro.analysis import traceutil
+
+    out = list(jaxpr.invars) + list(jaxpr.constvars) + list(jaxpr.outvars)
+    for eqn in traceutil.iter_eqns(jaxpr):
+        out.extend(eqn.invars)
+        out.extend(eqn.outvars)
+    return [v.aval for v in out if hasattr(v, "aval")]
+
+
+def _k_dimensioned(jaxpr, K: int) -> List[str]:
+    """Distinct shapes in the jaxpr with a K-sized dimension."""
+    hits = set()
+    for aval in _avals(jaxpr):
+        shape = tuple(getattr(aval, "shape", ()))
+        if K in shape:
+            hits.add(str(shape))
+    return sorted(hits)
+
+
+def check_engine(subject: str, eng) -> List[Finding]:
+    """Trace both round-body steps of one active engine: scan safety on
+    each, K absent from the client step, K present in bookkeeping."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import traceutil
+
+    K = eng.cfg.n_clients
+    findings: List[Finding] = []
+    for label, fn, args in eng.active_round_fns():
+        abstract = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+            args)
+        tr = traceutil.trace(fn, *abstract)
+        for v in tr.scan_safety_violations():
+            findings.append(Finding("error", "active", f"{subject}/{label}", v))
+        if tr.jaxpr is None:
+            continue
+        hits = _k_dimensioned(tr.jaxpr.jaxpr, K)
+        if label == "client-step" and hits:
+            findings.append(Finding(
+                "error", "active", f"{subject}/{label}",
+                f"K-sized arrays (K={K}) inside the gathered O(m) client "
+                f"step: {hits} — O(K) bookkeeping leaked into the per-round "
+                "device hot path, so device cost scales with the population "
+                "again"))
+        if label == "bookkeeping" and not hits:
+            findings.append(Finding(
+                "error", "active", f"{subject}/{label}",
+                f"bookkeeping step mentions no K-sized array (K={K}) — the "
+                "K-separation check is tracing the wrong function and "
+                "proves nothing"))
+    if not findings:
+        findings.append(Finding(
+            "ok", "active", subject,
+            f"both round-body steps scan-safe; no K={K} array in the "
+            "gathered client step (bookkeeping carries the O(K) state)"))
+    return findings
+
+
+def run() -> List[Finding]:
+    findings: List[Finding] = []
+    for label, strategy, strat_kw, eng_kw, codec in ANALYSIS_VARIANTS:
+        eng = build_engine(strategy, strat_kw, eng_kw, codec)
+        findings.extend(check_engine(f"active[{label}]", eng))
+    return findings

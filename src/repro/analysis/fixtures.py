@@ -24,7 +24,12 @@ One fixture per bug class the analyzer exists to catch:
 - :func:`telemetry_callback_engine` — a telemetry-enabled scan engine
   whose ``telemetry_hook`` smuggles a ``jax.debug.callback`` into the
   round body (the "just log it from the hook" mistake that would turn
-  the single-compilation engine into a per-round host round-trip).
+  the single-compilation engine into a per-round host round-trip);
+- :func:`leaky_active_engine` — an active-set engine whose gathered
+  O(m) client step folds the device-resident ``(K,)`` ``last_sync``
+  mirror into a cost term (weighted by 0.0, so every K = 100 numeric
+  test still passes) — the exact leak the K-separation pass exists to
+  catch before it voids the O(m) device-memory claim at K = 10^6.
 """
 from __future__ import annotations
 
@@ -188,6 +193,36 @@ def telemetry_callback_engine():
 
     eng.telemetry_hook = leaky_hook
     return eng
+
+
+# ---------------------------------------------------------------------------
+# Active-set fixtures
+# ---------------------------------------------------------------------------
+
+def leaky_active_engine():
+    """An active-set engine whose O(m) client step touches O(K) state.
+
+    The leak is numerically invisible — ``0.0 * sum(last_sync)`` — so
+    every conformance cell still passes bit-exactly, but the compiled
+    client step now closes over a ``(K,)`` array and device cost scales
+    with the population again.  ``repro.analysis.active_checks.
+    check_engine`` must flag it as an error.
+    """
+    from repro.analysis.active_checks import analysis_config
+    from repro.fl.active_engine import ActiveSetFederatedDistillation
+    from repro.fl.scenarios import Scenario, bernoulli_participation
+    from repro.fl.strategies import STRATEGIES
+
+    class LeakyActiveEngine(ActiveSetFederatedDistillation):
+        def _client_step(self, args):
+            out = super()._client_step(args)
+            out["uplink"] = out["uplink"] + 0.0 * jnp.sum(
+                self._get_last_sync_dev().astype(jnp.float32))
+            return out
+
+    return LeakyActiveEngine(
+        analysis_config(), STRATEGIES["scarlet"](), cache_duration=2,
+        scenario=Scenario(participation=bernoulli_participation(0.3)))
 
 
 # ---------------------------------------------------------------------------

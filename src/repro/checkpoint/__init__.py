@@ -1,1 +1,9 @@
-from repro.checkpoint.io import load_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.io import (  # noqa: F401
+    CheckpointDtypeError,
+    CheckpointError,
+    CheckpointKeyError,
+    CheckpointShapeError,
+    load_pytree,
+    save_pytree,
+)
+from repro.checkpoint.store import ClientParamStore  # noqa: F401

@@ -1,4 +1,28 @@
-"""npz-based pytree checkpointing (keyed by tree paths, dtype-preserving)."""
+"""npz-based pytree checkpointing (keyed by tree paths, dtype-preserving).
+
+npz keys are built from the jax key path with one component per path
+entry, **type-tagged and percent-escaped**:
+
+- ``d:<key>``  — dict key (``DictKey``), with ``%`` -> ``%25`` and
+  ``/`` -> ``%2F`` escaped inside the key;
+- ``i:<idx>``  — sequence index (``SequenceKey``);
+- ``a:<name>`` — attribute / named-tuple field (``GetAttrKey``);
+- ``f:<key>``  — flattened-index key (``FlattenedIndexKey``) or any
+  other path type, escaped like dict keys.
+
+This makes the mapping path -> key injective: a dict key containing
+``"/"`` (``{"a/b": x}`` vs ``{"a": {"b": y}}``) and a dict key ``"0"``
+vs a sequence index ``0`` no longer collide (both silently overwrote
+one leaf on save before).  ``load_pytree`` still falls back to the
+legacy untagged key for any leaf whose tagged key is absent, so
+checkpoints written by older code keep loading.
+
+Validation on load raises typed errors (never ``assert``, which
+``python -O`` strips): :class:`CheckpointKeyError` for missing or
+unconsumed npz keys, :class:`CheckpointShapeError` /
+:class:`CheckpointDtypeError` for leaf mismatches — a float64-saved
+leaf no longer silently casts into a float32 tree.
+"""
 from __future__ import annotations
 
 import os
@@ -9,7 +33,47 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class CheckpointError(Exception):
+    """Base class for checkpoint load/save validation failures."""
+
+
+class CheckpointKeyError(CheckpointError):
+    """A tree leaf has no stored array, or stored arrays went unused."""
+
+
+class CheckpointShapeError(CheckpointError):
+    """Stored array shape does not match the template leaf."""
+
+
+class CheckpointDtypeError(CheckpointError):
+    """Stored array dtype does not match the template leaf."""
+
+
+_BF16 = "BF16::"
+
+
+def _escape(s: str) -> str:
+    return s.replace("%", "%25").replace("/", "%2F")
+
+
+def _component(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return "d:" + _escape(str(p.key))
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return "i:" + str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return "a:" + _escape(str(p.name))
+    # FlattenedIndexKey and anything exotic.
+    return "f:" + _escape(str(getattr(p, "key", getattr(p, "idx", p))))
+
+
 def _key(path) -> str:
+    return "/".join(_component(p) for p in path)
+
+
+def _legacy_key(path) -> str:
+    # The pre-tagging scheme (collision-prone); used only as a load
+    # fallback so old fixtures keep working.
     return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
 
 
@@ -18,10 +82,13 @@ def save_pytree(path: str, tree: Any) -> None:
     arrays = {}
     for kp, leaf in flat:
         arr = np.asarray(leaf)
-        if arr.dtype == jnp.bfloat16:
-            arrays["BF16::" + _key(kp)] = arr.view(np.uint16)
-        else:
-            arrays[_key(kp)] = arr
+        k = _key(kp)
+        k = (_BF16 + k) if arr.dtype == jnp.bfloat16 else k
+        if k in arrays:
+            raise CheckpointKeyError(
+                f"duplicate npz key {k!r} — two tree paths flattened to the "
+                "same key, which would silently drop a leaf")
+        arrays[k] = arr.view(np.uint16) if arr.dtype == jnp.bfloat16 else arr
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(tmp, "wb") as f:
@@ -29,16 +96,47 @@ def save_pytree(path: str, tree: Any) -> None:
     os.replace(tmp, path)
 
 
+def _lookup(data, kp):
+    """Resolve one leaf path against the npz, tagged first then legacy.
+
+    Returns the stored array as **numpy** so dtype validation sees the
+    file's actual dtype — ``jnp.asarray`` here would silently downcast
+    a float64 file to float32 before the check could fire."""
+    for key in (_key(kp), _legacy_key(kp)):
+        if _BF16 + key in data:
+            return _BF16 + key, data[_BF16 + key].view(jnp.bfloat16)
+        if key in data:
+            return key, data[key]
+    raise CheckpointKeyError(
+        f"no stored array for leaf {_key(kp)!r} "
+        f"(legacy key {_legacy_key(kp)!r} also absent) in checkpoint")
+
+
 def load_pytree(path: str, like: Any) -> Any:
     with np.load(path) as data:
         flat, treedef = jax.tree_util.tree_flatten_with_path(like)
         leaves = []
+        consumed = set()
         for kp, leaf in flat:
-            k = _key(kp)
-            if "BF16::" + k in data:
-                arr = jnp.asarray(data["BF16::" + k].view(jnp.bfloat16))
-            else:
-                arr = jnp.asarray(data[k])
-            assert arr.shape == leaf.shape, (k, arr.shape, leaf.shape)
-            leaves.append(arr)
-        return jax.tree_util.tree_unflatten(treedef, [l for (_, l) in zip(flat, leaves)])
+            key, arr = _lookup(data, kp)
+            consumed.add(key)
+            leaf_shape = tuple(np.shape(leaf))
+            leaf_dtype = np.result_type(leaf)
+            if arr.shape != leaf_shape:
+                raise CheckpointShapeError(
+                    f"leaf {_key(kp)!r}: stored shape {tuple(arr.shape)} != "
+                    f"template shape {leaf_shape}")
+            if arr.dtype != leaf_dtype:
+                raise CheckpointDtypeError(
+                    f"leaf {_key(kp)!r}: stored dtype {arr.dtype} != "
+                    f"template dtype {leaf_dtype} (refusing to cast)")
+            # numpy template leaves stay numpy (e.g. the active engine's
+            # host-resident client store); everything else goes to device
+            leaves.append(arr if isinstance(leaf, np.ndarray)
+                          else jnp.asarray(arr))
+        extra = sorted(set(data.files) - consumed)
+        if extra:
+            raise CheckpointKeyError(
+                f"checkpoint holds {len(extra)} array(s) the template tree "
+                f"never consumed: {extra[:5]}{'...' if len(extra) > 5 else ''}")
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,192 @@
+"""Host-side client parameter store for the active-set engine.
+
+Client parameters for the dense engines are device-resident stacked
+pytrees — one ``(size_c, ...)`` leaf stack per cohort — which bounds
+the population K by device memory.  :class:`ClientParamStore` keeps the
+same per-cohort stacks on the **host** instead (plain numpy, or
+``np.memmap`` files under a directory for populations that exceed
+RAM), and moves only the m active clients per round:
+
+- :meth:`gather` pulls the selected rows of one cohort into a fresh
+  ``(m_c, ...)`` device stack;
+- :meth:`scatter` writes the updated rows back.
+
+The store is **bit-compatible** with the dense engines: rows are
+initialised by the same per-client ``ClientModels._init_one`` vmap
+(chunked — ``jax.random`` is counter-based, so per-key results do not
+depend on the batch split), and :meth:`as_param_list` reassembles the
+exact ``client_params`` list-of-stacked-pytrees structure the shared
+``state_dict()`` plumbing expects, so checkpoints interchange freely
+with host/scan/shard.
+
+Persistence rides :mod:`repro.checkpoint.io`: :meth:`save` writes one
+npz; :meth:`save_sharded` splits the client axis into
+``clients_per_shard`` row blocks (``clients_00000000_00000512.npz``
+...), so a million-client store never materialises as one file.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import CheckpointKeyError, load_pytree, save_pytree
+
+
+def _leaf_paths(tree) -> List[str]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
+            for kp, _ in flat]
+
+
+class ClientParamStore:
+    """Per-cohort host-resident stacks of client parameters.
+
+    Parameters
+    ----------
+    models:
+        A ``repro.fl.cohorts.ClientModels`` (owns cohort sizes and the
+        per-client initializer).
+    keys:
+        ``(K,)`` stacked PRNG keys, one per client (the same
+        ``jax.random.split(...)[:-1]`` slice the dense engines use).
+    backing:
+        ``"ram"`` (default) for plain numpy arrays, ``"memmap"`` for
+        ``np.lib.format.open_memmap`` files under ``directory``.
+    directory:
+        Required for ``backing="memmap"``; created if absent.
+    init_chunk:
+        Clients initialised per vmap call (bounds peak device memory
+        during initialisation; results are independent of the split).
+    """
+
+    def __init__(self, models, keys, *, backing: str = "ram",
+                 directory: Optional[str] = None, init_chunk: int = 4096):
+        if backing not in ("ram", "memmap"):
+            raise ValueError(f"unknown backing {backing!r}")
+        if backing == "memmap" and directory is None:
+            raise ValueError("backing='memmap' requires a directory")
+        self.models = models
+        self.backing = backing
+        self.directory = directory
+        self._cohorts: List[Dict[str, Any]] = []  # leaf-name -> (size_c, ...) array
+        self._treedefs = []
+        self._leaf_names: List[List[str]] = []
+        if backing == "memmap":
+            os.makedirs(directory, exist_ok=True)
+        for c, spec in enumerate(models.cohorts):
+            sl = models.slices[c]
+            size = models.sizes[c]
+            shapes = jax.eval_shape(lambda k, s=spec: models._init_one(s, k),
+                                    jax.ShapeDtypeStruct(keys.shape[1:], keys.dtype))
+            flat, treedef = jax.tree_util.tree_flatten(shapes)
+            names = _leaf_paths(shapes)
+            arrays = {}
+            for name, leaf in zip(names, flat):
+                shape = (size,) + tuple(leaf.shape)
+                dtype = np.dtype(leaf.dtype)
+                if backing == "ram":
+                    arrays[name] = np.empty(shape, dtype)
+                else:
+                    fn = os.path.join(directory, f"cohort{c}_{name.replace('/', '_')}.npy")
+                    arrays[name] = np.lib.format.open_memmap(
+                        fn, mode="w+", dtype=dtype, shape=shape)
+            self._cohorts.append(arrays)
+            self._treedefs.append(treedef)
+            self._leaf_names.append(names)
+            # Chunked init: identical per-row bits to the dense
+            # models.init_params(keys) vmap, any chunk size.  Eager
+            # vmap like the dense path — jitting would let XLA fuse
+            # (FMA) differently and shift init values by 1 ulp.
+            init_v = jax.vmap(lambda k, s=spec: models._init_one(s, k))
+            ck = keys[sl]
+            for lo in range(0, size, init_chunk):
+                hi = min(lo + init_chunk, size)
+                chunk = init_v(ck[lo:hi])
+                for name, leaf in zip(names, jax.tree_util.tree_leaves(chunk)):
+                    arrays[name][lo:hi] = np.asarray(leaf)
+
+    # -- shape/bookkeeping ------------------------------------------------
+    @property
+    def n_cohorts(self) -> int:
+        return len(self._cohorts)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.nbytes for c in self._cohorts for a in c.values())
+
+    def _unflatten(self, c: int, arrays: Sequence[Any]):
+        return jax.tree_util.tree_unflatten(self._treedefs[c], list(arrays))
+
+    # -- the data path ----------------------------------------------------
+    def gather(self, c: int, rows: np.ndarray):
+        """Device stack of cohort ``c``'s selected rows (``(len(rows), ...)``)."""
+        arrs = self._cohorts[c]
+        return self._unflatten(
+            c, [jnp.asarray(arrs[n][rows]) for n in self._leaf_names[c]])
+
+    def scatter(self, c: int, rows: np.ndarray, updated) -> None:
+        """Write an updated ``(len(rows), ...)`` device stack back."""
+        arrs = self._cohorts[c]
+        for name, leaf in zip(self._leaf_names[c],
+                              jax.tree_util.tree_leaves(updated)):
+            arrs[name][rows] = np.asarray(leaf)
+
+    # -- state_dict interchange -------------------------------------------
+    def as_param_list(self) -> List[Any]:
+        """The dense engines' ``client_params`` structure (numpy leaves)."""
+        return [self._unflatten(c, [arrs[n] for n in self._leaf_names[c]])
+                for c, arrs in enumerate(self._cohorts)]
+
+    def ingest_param_list(self, params: List[Any]) -> None:
+        """Overwrite the store from a dense ``client_params`` list."""
+        if len(params) != self.n_cohorts:
+            raise ValueError(
+                f"expected {self.n_cohorts} cohort stacks, got {len(params)}")
+        for c, stack in enumerate(params):
+            arrs = self._cohorts[c]
+            for name, leaf in zip(self._leaf_names[c],
+                                  jax.tree_util.tree_leaves(stack)):
+                if arrs[name].shape != np.shape(leaf):
+                    raise ValueError(
+                        f"cohort {c} leaf {name}: stack shape "
+                        f"{np.shape(leaf)} != store shape {arrs[name].shape}")
+                arrs[name][...] = np.asarray(leaf)
+
+    # -- persistence ------------------------------------------------------
+    def save(self, path: str) -> None:
+        save_pytree(path, self.as_param_list())
+
+    def load(self, path: str) -> None:
+        self.ingest_param_list(load_pytree(path, self.as_param_list()))
+
+    def save_sharded(self, directory: str, clients_per_shard: int) -> None:
+        """One npz per ``clients_per_shard`` row block of every cohort."""
+        os.makedirs(directory, exist_ok=True)
+        for c, arrs in enumerate(self._cohorts):
+            size = self.models.sizes[c]
+            for lo in range(0, size, clients_per_shard):
+                hi = min(lo + clients_per_shard, size)
+                block = self._unflatten(
+                    c, [arrs[n][lo:hi] for n in self._leaf_names[c]])
+                save_pytree(os.path.join(
+                    directory, f"cohort{c}_clients_{lo:08d}_{hi:08d}.npz"), block)
+
+    def load_sharded(self, directory: str, clients_per_shard: int) -> None:
+        for c, arrs in enumerate(self._cohorts):
+            size = self.models.sizes[c]
+            for lo in range(0, size, clients_per_shard):
+                hi = min(lo + clients_per_shard, size)
+                fn = os.path.join(
+                    directory, f"cohort{c}_clients_{lo:08d}_{hi:08d}.npz")
+                if not os.path.exists(fn):
+                    raise CheckpointKeyError(f"missing store shard {fn}")
+                like = self._unflatten(
+                    c, [arrs[n][lo:hi] for n in self._leaf_names[c]])
+                block = load_pytree(fn, like)
+                for name, leaf in zip(self._leaf_names[c],
+                                      jax.tree_util.tree_leaves(block)):
+                    arrs[name][lo:hi] = np.asarray(leaf)

@@ -248,14 +248,27 @@ def catch_up_bytes_device(
     bytes_per_value: float = 4.0,
     *,
     axis_name: str | None = None,
+    method: str = "dense",
 ) -> jnp.ndarray:
-    """Total catch-up downlink bytes for this round, computed densely.
+    """Total catch-up downlink bytes for this round.
 
     jit/scan-safe equivalent of ``make_catch_up`` + ``catch_up_bytes``
     summed over returning stragglers: for each participating client
     whose ``last_sync`` predates round ``t - 1``, count the global-cache
     entries newer than its sync point and charge values + index + ts per
     entry.  ``last_sync``/``part`` are ``(K,)``; ``t`` may be traced.
+
+    ``method`` selects the counting kernel; both produce **bit-identical
+    totals** (the per-client term is an exact small-integer count times
+    the same constant, summed in client order):
+
+    - ``"dense"`` (default, the scan/shard engines' path) materializes
+      the ``(K, |P|)`` comparison matrix — fine at simulation scale;
+    - ``"sorted"`` sorts the present entries' timestamps once
+      (non-present entries map to a sentinel below every possible
+      ``last_sync``) and counts via ``searchsorted``, using O(K + |P|)
+      memory — the active-set engine's path, where K may be 10^6 and a
+      K x |P| bool matrix must never materialize.
 
     Under a client-sharded (``shard_map``) engine, ``last_sync``/``part``
     are the shard-local ``(K_loc,)`` slices; pass ``axis_name`` to
@@ -264,9 +277,21 @@ def catch_up_bytes_device(
     """
     n_classes = cache_g.num_classes
     returning = jnp.logical_and(part, last_sync < t - 1)              # (K,)
-    newer = jnp.logical_and(cache_g.present[None, :],
-                            cache_g.ts[None, :] > last_sync[:, None])  # (K, |P|)
-    counts = jnp.sum(newer, axis=1).astype(jnp.float32)
+    if method == "dense":
+        newer = jnp.logical_and(cache_g.present[None, :],
+                                cache_g.ts[None, :] > last_sync[:, None])  # (K, |P|)
+        counts = jnp.sum(newer, axis=1).astype(jnp.float32)
+    elif method == "sorted":
+        # count_k = |{p : present_p and ts_p > last_sync_k}|, via one
+        # sort of the |P| timestamps.  Non-present entries sink to
+        # _NEVER - 1, strictly below any reachable last_sync (>= _NEVER),
+        # so they can never land on the "newer" side of the split.
+        ts_eff = jnp.where(cache_g.present, cache_g.ts, _NEVER - 1)
+        ts_sorted = jnp.sort(ts_eff)                                   # (|P|,)
+        pos = jnp.searchsorted(ts_sorted, last_sync, side="right")     # (K,)
+        counts = (ts_sorted.shape[0] - pos).astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown catch-up method {method!r}")
     per_client = counts * (n_classes * bytes_per_value + 8.0)
     total = jnp.sum(jnp.where(returning, per_client, 0.0))
     if axis_name is not None:

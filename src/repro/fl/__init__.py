@@ -1,5 +1,6 @@
 """Federated-distillation package: strategies x scenarios on a vmapped
 client substrate.  See ``src/repro/fl/README.md`` for the layout."""
+from repro.fl.active_engine import ActiveSetFederatedDistillation  # noqa: F401
 from repro.fl.api import run_method  # noqa: F401
 from repro.fl.baselines import FedAvg, Individual  # noqa: F401
 from repro.fl.cohorts import ClientModels, CohortSpec, resolve_cohorts  # noqa: F401

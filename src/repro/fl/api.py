@@ -4,6 +4,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
+from repro.fl.active_engine import ActiveSetFederatedDistillation
 from repro.fl.baselines import FedAvg, Individual
 from repro.fl.cohorts import CohortSpec
 from repro.fl.config import FLConfig
@@ -17,6 +18,7 @@ _ENGINES = {
     "host": FederatedDistillation,
     "scan": ScannedFederatedDistillation,
     "shard": ShardedFederatedDistillation,
+    "active": ActiveSetFederatedDistillation,
 }
 
 __all__ = ["run_method"]
@@ -55,7 +57,11 @@ def run_method(
     :mod:`repro.fl.scan_engine`); ``engine="shard"`` additionally
     partitions the client axis over the ``cfg.mesh_spec`` device mesh
     (:mod:`repro.fl.shard_engine` — client counts beyond one chip's
-    memory); ``engine="host"`` is the reference Python round loop.
+    memory); ``engine="active"`` keeps client state in a host-side
+    (optionally memory-mapped) store and runs only each round's active
+    participants on device (:mod:`repro.fl.active_engine` — million-
+    client populations at O(m) device cost, same byte-exact ledger);
+    ``engine="host"`` is the reference Python round loop.
     ``rng_backend="jax"`` makes the host loop draw
     subsets/participation from the scanned engines' key stream so all
     engines are directly comparable.

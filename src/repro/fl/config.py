@@ -58,6 +58,12 @@ class FLConfig:
     # cache_delta[+quantN]).  The host engine ignores the flag — it is
     # the per-op reference the fused path is validated against.
     fused_round: bool = False
+    # private/test shard assignment: "dirichlet" (the paper's non-IID
+    # label partition — the default every pinned ledger/metric assumes)
+    # or "uniform" (vectorized round-robin split, O(n) with no Python
+    # loop over clients — the only partition that is tractable at the
+    # active-set engine's K = 10^6 benchmark scale).
+    partition: str = "dirichlet"
     # opt-in device-plane telemetry (repro.obs): accumulate a
     # RoundTelemetry pytree (cache hit/miss census, participation and
     # staleness counters, payload bytes, teacher-entropy/beta gauges)

@@ -40,7 +40,12 @@ from repro.compress import get_codec
 from repro.core import cache as cache_lib
 from repro.core import comm as comm_lib
 from repro.obs import device as obs_device
-from repro.data.synthetic import dirichlet_partition, make_public_private, pad_client_shards
+from repro.data.synthetic import (
+    dirichlet_partition,
+    make_public_private,
+    pad_client_shards,
+    uniform_client_shards,
+)
 from repro.fl.cohorts import ClientModels, resolve_cohorts
 from repro.fl.config import FLConfig
 from repro.fl.scenarios import Scenario
@@ -270,23 +275,56 @@ class FederatedDistillation:
         self._setup()
 
     # ------------------------------------------------------------------
+    # Placement/init hooks: the active-set engine
+    # (repro.fl.active_engine) overrides these to keep O(K)-sized
+    # per-client state on the host; for the dense engines they are the
+    # identity of the historical code, so traced programs (and golden
+    # ledgers) are untouched.
+    # ------------------------------------------------------------------
+    def _client_array(self, x):
+        """Placement for O(K) per-client data arrays (one row per
+        client: private/test shards, masks, per-client schedules)."""
+        return jnp.asarray(x)
+
+    def _eval_array(self, x):
+        """Placement for eval-only arrays whose size tracks the
+        population (the held-out test set is ``~private_size/5``)."""
+        return jnp.asarray(x)
+
+    def _init_client_params(self, keys) -> None:
+        """Materialize per-client parameters from the ``(K, ...)``
+        stacked key slice (one key per client, global order)."""
+        self.client_params = self.models.init_params(keys)
+
+    def _partition_clients(self, x, y, seed: int):
+        """Per-client shards in the dense ``(xs, ys, mask)`` layout."""
+        c = self.cfg
+        if c.partition == "uniform":
+            return uniform_client_shards(x, y, c.n_clients)
+        if c.partition != "dirichlet":
+            raise ValueError(f"unknown partition {c.partition!r} "
+                             "(want 'dirichlet' or 'uniform')")
+        parts = dirichlet_partition(y, c.n_clients, c.alpha, seed=seed)
+        return pad_client_shards(x, y, parts)
+
+    # ------------------------------------------------------------------
     def _setup(self) -> None:
         c = self.cfg
         data = make_public_private(c.private_size, c.public_size, c.n_classes,
                                    c.dim, seed=c.seed,
                                    cluster_scale=c.cluster_scale, noise=c.noise)
         self.data = data
-        parts = dirichlet_partition(data["y_private"], c.n_clients, c.alpha,
-                                    seed=c.seed)
         self.xs, self.ys, self.mask = map(
-            jnp.asarray, pad_client_shards(data["x_private"], data["y_private"], parts))
-        tparts = dirichlet_partition(data["y_test"], c.n_clients, c.alpha,
-                                     seed=c.seed + 7)
+            self._client_array,
+            self._partition_clients(data["x_private"], data["y_private"],
+                                    seed=c.seed))
         self.xts, self.yts, self.tmask = map(
-            jnp.asarray, pad_client_shards(data["x_test"], data["y_test"], tparts))
+            self._client_array,
+            self._partition_clients(data["x_test"], data["y_test"],
+                                    seed=c.seed + 7))
         self.x_pub = jnp.asarray(data["x_public"])
-        self.x_test = jnp.asarray(data["x_test"])
-        self.y_test = jnp.asarray(data["y_test"])
+        self.x_test = self._eval_array(data["x_test"])
+        self.y_test = self._eval_array(data["y_test"])
 
         # Client-model cohorts: client_params is a LIST with one stacked
         # pytree per cohort (architectures differ, so one stacked tree is
@@ -296,7 +334,7 @@ class FederatedDistillation:
         self.models = ClientModels(resolve_cohorts(c), c.dim, c.n_classes)
         key = jax.random.PRNGKey(c.seed)
         keys = jax.random.split(key, c.n_clients + 1)
-        self.client_params = self.models.init_params(keys[:-1])
+        self._init_client_params(keys[:-1])
         self.server_params = init_mlp(keys[-1], c.dim, c.n_classes, c.hidden, c.mlp_depth)
 
         # Appendix-D validation splits: 10% of public for the server proxy,
@@ -307,8 +345,10 @@ class FederatedDistillation:
                 c.public_size, n_pub_val, replace=False))
         val_cut = jnp.maximum((jnp.sum(self.mask, 1) * 0.9).astype(jnp.int32), 1)
         pos = jnp.arange(self.mask.shape[1])[None, :]
-        self.val_mask = jnp.logical_and(self.mask, pos >= val_cut[:, None])
-        self.train_mask = jnp.logical_and(self.mask, pos < val_cut[:, None])
+        self.val_mask = self._client_array(
+            jnp.logical_and(self.mask, pos >= val_cut[:, None]))
+        self.train_mask = self._client_array(
+            jnp.logical_and(self.mask, pos < val_cut[:, None]))
         # per-cohort views of every per-client array (identity for a
         # single cohort); the data partition itself is cohort-agnostic
         m = self.models
@@ -334,8 +374,8 @@ class FederatedDistillation:
         het = self.scenario.heterogeneity
         if het is not None:
             lr_k, steps_k, max_steps = het.resolve(c.n_clients, c.lr, c.local_steps)
-            self._lr_k = jnp.asarray(lr_k, jnp.float32)
-            self._steps_k = jnp.asarray(steps_k, jnp.int32)
+            self._lr_k = self._client_array(jnp.asarray(lr_k, jnp.float32))
+            self._steps_k = self._client_array(jnp.asarray(steps_k, jnp.int32))
             self._lr_k_c = self.models.split(self._lr_k)
             self._steps_k_c = self.models.split(self._steps_k)
             self._max_steps = max_steps

@@ -154,6 +154,54 @@ def test_telemetry_callback_hook_flagged():
     assert any("callback" in f.message for f in errs)
 
 
+@pytest.mark.slow
+def test_repo_active_pass_clean():
+    from repro.analysis import active_checks
+
+    findings = active_checks.run()
+    errs = [f for f in findings if f.level == "error"]
+    assert not errs, "\n".join(str(f) for f in errs)
+    # one ok per analysis variant, each certifying the K-separation
+    oks = [f for f in findings if f.level == "ok"]
+    assert len(oks) == len(active_checks.ANALYSIS_VARIANTS)
+    assert all(f"K={active_checks.K_ANALYSIS}" in f.message for f in oks)
+
+
+def test_leaky_active_engine_flagged():
+    from repro.analysis import active_checks
+
+    got = active_checks.check_engine(
+        "fixture/active-k-leak", fixtures.leaky_active_engine())
+    errs = [f for f in got if f.level == "error"]
+    assert errs, "O(K) leak into the gathered client step not flagged"
+    assert any("client step" in f.message for f in errs)
+    # the leak is in the client step, not the (legitimately O(K))
+    # bookkeeping step
+    assert all("client-step" in f.subject for f in errs)
+
+
+def test_active_pass_traces_the_right_functions():
+    """The K-presence sanity check: hand the checker an engine whose
+    bookkeeping never touches K-sized state and it must refuse to
+    certify (a vacuous K-separation proof is worse than none)."""
+    from repro.analysis import active_checks
+
+    eng = active_checks.build_engine("scarlet", {}, {"cache_duration": 2},
+                                     "identity")
+    orig = eng.active_round_fns
+
+    def swapped():
+        entries = orig()
+        # keep only the client step but mislabel it as bookkeeping
+        (_, fn, args) = [e for e in entries if e[0] == "client-step"][0]
+        return [("bookkeeping", fn, args)]
+
+    eng.active_round_fns = swapped
+    got = active_checks.check_engine("fixture/mislabeled", eng)
+    errs = [f for f in got if f.level == "error"]
+    assert errs and any("proves nothing" in f.message for f in errs)
+
+
 def test_broken_carry_flagged_fixed_carry_clean():
     from repro.analysis import replication_checks
 

@@ -17,9 +17,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import load_pytree, save_pytree
+from repro.checkpoint import (
+    CheckpointDtypeError,
+    CheckpointKeyError,
+    CheckpointShapeError,
+    load_pytree,
+    save_pytree,
+)
 from repro.core import comm
 from repro.fl import (
+    ActiveSetFederatedDistillation,
     FederatedDistillation,
     FLConfig,
     ScannedFederatedDistillation,
@@ -40,6 +47,7 @@ ENGINES = {
     "host": FederatedDistillation,
     "scan": ScannedFederatedDistillation,
     "shard": ShardedFederatedDistillation,
+    "active": ActiveSetFederatedDistillation,
 }
 
 
@@ -75,8 +83,82 @@ def test_pytree_roundtrip_preserves_values_and_dtypes(tmp_path):
 def test_pytree_roundtrip_rejects_shape_mismatch(tmp_path):
     path = str(tmp_path / "tree.npz")
     save_pytree(path, {"w": jnp.zeros((2, 3))})
-    with pytest.raises(AssertionError):
+    with pytest.raises(CheckpointShapeError, match=r"\(2, 3\)"):
         load_pytree(path, {"w": jnp.zeros((3, 2))})
+
+
+def test_pytree_roundtrip_rejects_dtype_mismatch(tmp_path):
+    """Regression: the old loader checked only shapes, so an f64 file
+    silently loaded into an f32 template (or int into float) and the
+    cast surfaced later as drift.  The typed error must fire instead."""
+    path = str(tmp_path / "tree.npz")
+    save_pytree(path, {"w": np.zeros((2, 3), np.float64)})
+    with pytest.raises(CheckpointDtypeError, match="refusing to cast"):
+        load_pytree(path, {"w": jnp.zeros((2, 3), jnp.float32)})
+
+
+def test_pytree_load_reports_missing_and_extra_keys(tmp_path):
+    path = str(tmp_path / "tree.npz")
+    save_pytree(path, {"a": jnp.zeros(2), "b": jnp.ones(2)})
+    # missing: the like-tree wants a leaf the file never stored
+    with pytest.raises(CheckpointKeyError, match="no stored array"):
+        load_pytree(path, {"a": jnp.zeros(2), "c": jnp.zeros(2)})
+    # extra: the file holds leaves the like-tree never consumed
+    with pytest.raises(CheckpointKeyError, match="never consumed"):
+        load_pytree(path, {"a": jnp.zeros(2)})
+
+
+def test_pytree_key_escaping_disambiguates_paths(tmp_path):
+    """Regression for the ``_key`` collisions: a dict key containing a
+    literal "/" used to collide with genuine nesting, and a dict key
+    "0" with sequence index 0 — the later leaf silently overwrote the
+    earlier one in the npz and both loaded the same array.  With tagged,
+    escaped components every leaf round-trips distinctly."""
+    tree = {
+        "a/b": jnp.asarray([1.0, 2.0]),
+        "a": {"b": jnp.asarray([3.0, 4.0])},
+        "s": {"0": jnp.asarray([5.0])},
+        "t": (jnp.asarray([6.0]),),
+    }
+    path = str(tmp_path / "tree.npz")
+    save_pytree(path, tree)
+    out = load_pytree(path, tree)
+    np.testing.assert_array_equal(np.asarray(out["a/b"]), [1.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(out["a"]["b"]), [3.0, 4.0])
+    np.testing.assert_array_equal(np.asarray(out["s"]["0"]), [5.0])
+    np.testing.assert_array_equal(np.asarray(out["t"][0]), [6.0])
+
+
+def test_pytree_save_rejects_colliding_keys(tmp_path):
+    """If two leaves ever mapped to the same npz entry the writer must
+    fail loudly instead of silently dropping one (belt and braces on
+    top of the escaping)."""
+    from repro.checkpoint import io as ckpt_io
+
+    tree = {"x": jnp.zeros(2), "y": jnp.ones(2)}
+    orig = ckpt_io._key
+    ckpt_io._key = lambda path: "same"
+    try:
+        with pytest.raises(CheckpointKeyError, match="duplicate npz key"):
+            save_pytree(str(tmp_path / "t.npz"), tree)
+    finally:
+        ckpt_io._key = orig
+
+
+def test_pytree_load_accepts_legacy_untagged_keys(tmp_path):
+    """Checkpoints written by the old joiner (plain "/"-joined, untagged
+    components) must still load when their keys were unambiguous."""
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"ts": jnp.asarray([1, 2], jnp.int32)},
+            "tup": (jnp.asarray([1.5], jnp.float32),)}
+    path = str(tmp_path / "legacy.npz")
+    np.savez(path, **{"w": np.asarray(tree["w"]),
+                      "nested/ts": np.asarray(tree["nested"]["ts"]),
+                      "tup/0": np.asarray(tree["tup"][0])})
+    out = load_pytree(path, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 # ---------------------------------------------------------------------------

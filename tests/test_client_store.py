@@ -1,0 +1,173 @@
+"""ClientParamStore (repro.checkpoint.store) + the sorted catch-up
+counting kernel (repro.core.cache.catch_up_bytes_device method="sorted")
+— the two host/device substrates of the active-set engine.
+
+The store contract: bit-compatible with the dense engines' client
+parameter stacks (same per-key init, same ``client_params`` structure),
+gather/scatter round-trips rows exactly, persistence (whole-file and
+row-sharded) rides the checkpoint io layer.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointKeyError, ClientParamStore
+from repro.core import cache as cache_lib
+from repro.fl import FLConfig
+from repro.fl.cohorts import ClientModels, CohortSpec, resolve_cohorts
+
+CFG = FLConfig(n_clients=6, n_classes=4, dim=8, hidden=12, mlp_depth=1)
+
+
+def _models(cfg=CFG):
+    return ClientModels(resolve_cohorts(cfg), cfg.dim, cfg.n_classes)
+
+
+def _keys(cfg=CFG):
+    return jax.random.split(jax.random.PRNGKey(cfg.seed), cfg.n_clients + 1)[:-1]
+
+
+def _assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# init parity + gather/scatter
+# ---------------------------------------------------------------------------
+
+def test_store_init_matches_dense_init_bitwise():
+    """Chunked store init must produce the exact rows of the dense
+    ``models.init_params(keys)`` vmap (jax.random is counter-based, so
+    the batch split cannot change per-key results)."""
+    models, keys = _models(), _keys()
+    store = ClientParamStore(models, keys, init_chunk=2)
+    _assert_trees_equal(store.as_param_list(), models.init_params(keys))
+
+
+def test_store_init_parity_with_cohorts():
+    cfg = dataclasses.replace(
+        CFG, n_clients=7, cohorts=(CohortSpec(4, 16, 2), CohortSpec(3, 8, 1)))
+    models, keys = _models(cfg), _keys(cfg)
+    store = ClientParamStore(models, keys, init_chunk=3)
+    assert store.n_cohorts == 2
+    _assert_trees_equal(store.as_param_list(), models.init_params(keys))
+
+
+def test_store_gather_scatter_roundtrip():
+    models, keys = _models(), _keys()
+    store = ClientParamStore(models, keys)
+    rows = np.asarray([1, 3, 4])
+    stack = store.gather(0, rows)
+    bumped = jax.tree_util.tree_map(lambda a: a + 1.0, stack)
+    store.scatter(0, rows, bumped)
+    _assert_trees_equal(store.gather(0, rows), bumped)
+    # untouched rows keep their original bits
+    _assert_trees_equal(store.gather(0, np.asarray([0])),
+                        jax.tree_util.tree_map(
+                            lambda a: a[0:1], models.init_params(keys)[0]))
+
+
+def test_store_memmap_backing_matches_ram(tmp_path):
+    models, keys = _models(), _keys()
+    ram = ClientParamStore(models, keys)
+    mm = ClientParamStore(models, keys, backing="memmap",
+                          directory=str(tmp_path))
+    _assert_trees_equal(ram.as_param_list(), mm.as_param_list())
+    assert mm.nbytes == ram.nbytes
+
+
+def test_store_rejects_bad_backing(tmp_path):
+    models, keys = _models(), _keys()
+    with pytest.raises(ValueError, match="backing"):
+        ClientParamStore(models, keys, backing="tape")
+    with pytest.raises(ValueError, match="directory"):
+        ClientParamStore(models, keys, backing="memmap")
+
+
+def test_store_ingest_validates_structure():
+    models, keys = _models(), _keys()
+    store = ClientParamStore(models, keys)
+    with pytest.raises(ValueError, match="cohort stacks"):
+        store.ingest_param_list([])
+    bad = [jax.tree_util.tree_map(lambda a: a[:2], store.as_param_list()[0])]
+    with pytest.raises(ValueError, match="shape"):
+        store.ingest_param_list(bad)
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+def test_store_save_load_roundtrip(tmp_path):
+    models, keys = _models(), _keys()
+    store = ClientParamStore(models, keys)
+    store.scatter(0, np.asarray([2]), jax.tree_util.tree_map(
+        lambda a: a * 2.0, store.gather(0, np.asarray([2]))))
+    path = str(tmp_path / "store.npz")
+    store.save(path)
+    other = ClientParamStore(models, keys)
+    other.load(path)
+    _assert_trees_equal(store.as_param_list(), other.as_param_list())
+
+
+def test_store_sharded_save_load_roundtrip(tmp_path):
+    cfg = dataclasses.replace(
+        CFG, n_clients=7, cohorts=(CohortSpec(4, 16, 2), CohortSpec(3, 8, 1)))
+    models, keys = _models(cfg), _keys(cfg)
+    store = ClientParamStore(models, keys)
+    store.save_sharded(str(tmp_path), clients_per_shard=3)
+    # 4-client cohort -> 2 shards, 3-client cohort -> 1 shard
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert names == ["cohort0_clients_00000000_00000003.npz",
+                     "cohort0_clients_00000003_00000004.npz",
+                     "cohort1_clients_00000000_00000003.npz"]
+    other = ClientParamStore(models, keys)
+    other.scatter(0, np.arange(4), jax.tree_util.tree_map(
+        lambda a: a * 0.0, other.gather(0, np.arange(4))))
+    other.load_sharded(str(tmp_path), clients_per_shard=3)
+    _assert_trees_equal(store.as_param_list(), other.as_param_list())
+
+
+def test_store_load_sharded_missing_shard(tmp_path):
+    models, keys = _models(), _keys()
+    store = ClientParamStore(models, keys)
+    store.save_sharded(str(tmp_path), clients_per_shard=4)
+    with pytest.raises(CheckpointKeyError, match="missing store shard"):
+        store.load_sharded(str(tmp_path), clients_per_shard=3)
+
+
+# ---------------------------------------------------------------------------
+# sorted catch-up counting kernel: bit-identical totals to the dense
+# (K, |P|) comparison matrix, without ever materialising it
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_catch_up_bytes_sorted_matches_dense_bitwise(seed):
+    rng = np.random.default_rng(seed)
+    P, K, n_classes, t = 32, 50, 6, 9
+    cache = cache_lib.CacheState(
+        values=jnp.asarray(rng.random((P, n_classes), np.float32)),
+        ts=jnp.asarray(rng.integers(0, t, P), jnp.int32),
+        present=jnp.asarray(rng.random(P) < 0.7),
+    )
+    last_sync = jnp.asarray(rng.integers(0, t, K), jnp.int32)
+    part = jnp.asarray(rng.random(K) < 0.4)
+    dense = cache_lib.catch_up_bytes_device(cache, last_sync, part, t,
+                                            method="dense")
+    srt = cache_lib.catch_up_bytes_device(cache, last_sync, part, t,
+                                          method="sorted")
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(srt))
+
+
+def test_catch_up_bytes_rejects_unknown_method():
+    cache = cache_lib.init_cache(8, 4)
+    with pytest.raises(ValueError, match="method"):
+        cache_lib.catch_up_bytes_device(cache, jnp.zeros(4, jnp.int32),
+                                        jnp.ones(4, bool), 3, method="hash")

@@ -30,6 +30,7 @@ import numpy as np
 import pytest
 
 from repro.fl import (
+    ActiveSetFederatedDistillation,
     CohortSpec,
     FederatedDistillation,
     FLConfig,
@@ -252,6 +253,112 @@ def test_host_engine_ignores_fused_flag():
         cfg, STRATEGIES["scarlet"](beta=1.5), cache_duration=3,
         scenario=PARTICIPATIONS["bernoulli"], rng_backend="jax")
     assert_parity(on, on.run(), off, off.run(), ledger="exact")
+
+
+# ---------------------------------------------------------------------------
+# Active-set engine (repro.fl.active_engine): host-resident client
+# store, O(m) gathered device compute.  Contract: ledger **byte-
+# identical** to the scan engine (every cost input is an exact
+# small-integer count evaluated by the same f32 expression) and
+# float32-exact against the host loop; metrics/cache allclose (the
+# gathered stack sums m rows where the dense engines sum K masked
+# rows).  {scarlet, dsfl} x {bernoulli, outage} x {identity,
+# cache_delta+quant8} per the engine's acceptance matrix.
+# ---------------------------------------------------------------------------
+
+ACTIVE_MATRIX = [(s, p, c) for s in ("dsfl", "scarlet")
+                 for p in ("bernoulli", "outage")
+                 for c in ("identity", "cache_delta+quant8")]
+
+
+@pytest.mark.parametrize("name,participation,codec", ACTIVE_MATRIX,
+                         ids=["-".join(p) for p in ACTIVE_MATRIX])
+def test_active_engine_conformance_cell(name, participation, codec):
+    host = _build(FederatedDistillation, name, participation, codec,
+                  rng_backend="jax")
+    scan = _build(ScannedFederatedDistillation, name, participation, codec)
+    active = _build(ActiveSetFederatedDistillation, name, participation,
+                    codec)
+    cache_atol = 1e-5 if codec == "identity" else 5e-3
+    assert_parity(*active, *scan, ledger="exact", cache_atol=cache_atol)
+    assert_parity(*active, *host, ledger="close", cache_atol=cache_atol)
+
+
+def test_active_engine_cohort_conformance():
+    """Heterogeneous model cohorts: gather/scatter is per-cohort, so the
+    mixed-architecture path must keep the byte-exact ledger contract."""
+    cfg = dataclasses.replace(CFG, n_clients=8, cohorts=COHORTS["2cohort"])
+    sc = PARTICIPATIONS["bernoulli"]
+
+    def build(engine_cls):
+        eng = engine_cls(cfg, STRATEGIES["scarlet"](beta=1.5),
+                         cache_duration=3, scenario=sc)
+        return eng, eng.run()
+
+    scan = build(ScannedFederatedDistillation)
+    active = build(ActiveSetFederatedDistillation)
+    assert len(active[1].cohort_client_acc[0]) == 2
+    assert_parity(*active, *scan, ledger="exact")
+
+
+def test_active_engine_heterogeneous_schedules():
+    """Per-client lr/step schedules are gathered rows, not K-stacks:
+    the scheduled cells must still agree byte-exactly on the ledger."""
+    from repro.fl import Heterogeneity
+
+    het = Heterogeneity(local_steps=(1, 2, 3, 2),
+                        lr_scale=(1.0, 0.5, 2.0, 1.0), lr_decay=0.9)
+    sc = Scenario(participation=bernoulli_participation(0.7),
+                  heterogeneity=het)
+    scan = ScannedFederatedDistillation(
+        CFG, STRATEGIES["scarlet"](beta=1.5), cache_duration=3, scenario=sc)
+    active = ActiveSetFederatedDistillation(
+        CFG, STRATEGIES["scarlet"](beta=1.5), cache_duration=3, scenario=sc)
+    assert_parity(scan, scan.run(), active, active.run(), ledger="exact")
+
+
+def test_active_engine_memmap_backing(tmp_path):
+    """The memory-mapped store is an I/O detail: a memmap-backed run is
+    byte-identical to the default RAM-backed run."""
+    def build(**kw):
+        eng = ActiveSetFederatedDistillation(
+            CFG, STRATEGIES["scarlet"](beta=1.5), cache_duration=3,
+            scenario=PARTICIPATIONS["bernoulli"], **kw)
+        return eng, eng.run()
+
+    ram = build()
+    mm = build(store_backing="memmap", store_dir=str(tmp_path))
+    assert_parity(*ram, *mm, ledger="exact")
+
+
+def test_active_engine_telemetry_matches_scan():
+    """Telemetry rows: exact counters byte-equal, gauges allclose."""
+    from repro.obs.device import EXACT_FIELDS, GAUGE_FIELDS
+
+    cfg = dataclasses.replace(CFG, telemetry=True)
+
+    def build(engine_cls):
+        eng = engine_cls(cfg, STRATEGIES["scarlet"](beta=1.5),
+                         cache_duration=3,
+                         scenario=PARTICIPATIONS["outage"])
+        return eng.run()
+
+    ts = build(ScannedFederatedDistillation).telemetry.stacks()
+    ta = build(ActiveSetFederatedDistillation).telemetry.stacks()
+    for f in EXACT_FIELDS:
+        np.testing.assert_array_equal(ta[f], ts[f], err_msg=f)
+    for f in GAUGE_FIELDS:
+        np.testing.assert_allclose(ta[f], ts[f], atol=1e-5, err_msg=f)
+
+
+def test_active_engine_rejects_bad_store_config():
+    strat = STRATEGIES["scarlet"](beta=1.5)
+    with pytest.raises(ValueError, match="directory"):
+        ActiveSetFederatedDistillation(CFG, strat, cache_duration=3,
+                                       store_backing="memmap")
+    with pytest.raises(ValueError, match="backing"):
+        ActiveSetFederatedDistillation(CFG, strat, cache_duration=3,
+                                       store_backing="tape")
 
 
 # ---------------------------------------------------------------------------
