@@ -1,0 +1,105 @@
+"""Async engine throughput under traffic: windows x staleness decay.
+
+One sweep over ``(window_ticks, staleness_decay)`` cells of the
+buffered-aggregation engine (:mod:`repro.fl.async_engine`) under a
+genuinely asynchronous traffic model — Poisson arrivals, 0-3 window
+uniform report latency — so the timed program carries the full
+dispatch/arrival bookkeeping: in-flight state, the split catch-up
+ledger, and (at non-unit decay) the staleness-weight multiply.  The
+claims under test:
+
+- the async round body stays a single compiled ``lax.scan`` program
+  (rounds/sec in the same regime as the scan engine, not a per-round
+  host loop), and
+- unit staleness decay costs nothing — the engine statically skips the
+  weight hook, so the ``decay=1.0`` and ``decay=0.5`` cells isolate
+  the hook's arithmetic.
+
+Timings use the ``engine_bench`` recipe: dispatch-bound tiny model
+(1 local step, depth-1 MLP), one full warmup leg to compile the
+T-shaped scan, then an identically-shaped timed leg (same program,
+cache hit).  ``cum_mb`` is the timed leg's ledger total — the byte
+record the conformance suite pins.
+
+``--quick`` keeps two CI-sized cells whose ``rounds_per_sec`` feeds
+the perf-regression gate (``BENCH_async.json``).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.fl import FLConfig
+from repro.fl.async_engine import AsyncFederatedDistillation
+from repro.fl.strategies import STRATEGIES
+from repro.fl.traffic import ArrivalProcess, LatencyModel, TrafficModel
+
+ROUNDS = 40
+N_CLIENTS = 32
+GRID = (  # (window_ticks, staleness_decay)
+    (1, 1.0),
+    (1, 0.5),
+    (4, 1.0),
+    (4, 0.5),
+)
+QUICK_GRID = ((1, 1.0), (4, 0.5))
+QUICK_ROUNDS = 12
+
+
+def _cfg(rounds: int) -> FLConfig:
+    return FLConfig(
+        n_clients=N_CLIENTS, n_classes=10, dim=8, rounds=2 * rounds + 1,
+        local_steps=1, distill_steps=1, public_size=256, public_per_round=64,
+        private_size=2 * N_CLIENTS, partition="uniform", hidden=8,
+        mlp_depth=1, eval_every=10**6, seed=0)
+
+
+def _traffic(window_ticks: int) -> TrafficModel:
+    return TrafficModel(
+        arrivals=ArrivalProcess("poisson", rate=1.5),
+        latency=LatencyModel("uniform", lo=0, hi=3),
+        window_ticks=window_ticks, seed=0)
+
+
+def _bench_point(window_ticks: int, decay: float, rounds: int) -> dict:
+    eng = AsyncFederatedDistillation(
+        _cfg(rounds), STRATEGIES["scarlet"](beta=1.5, staleness_decay=decay),
+        cache_duration=3, traffic=_traffic(window_ticks))
+    eng.run(rounds)  # warmup: compiles the T-shaped scan program
+    t0 = time.perf_counter()
+    hist = eng.run(rounds)  # same shape -> compile-cache hit, pure run
+    dt = time.perf_counter() - t0
+    cum_mb = hist.ledger.cumulative_total / 1e6
+    arrived = sum(1 for r in hist.ledger.rounds if r.uplink > 0)
+    return {
+        "name": f"async/w={window_ticks},decay={decay}",
+        "us_per_call": dt / rounds * 1e6,
+        "rounds_per_sec": rounds / dt,
+        "window_ticks": window_ticks,
+        "staleness_decay": decay,
+        "cum_mb": cum_mb,
+        "arrival_rounds": arrived,
+        "derived": (f"K={N_CLIENTS} arr_rounds={arrived}/{rounds} "
+                    f"cum={cum_mb:.2f}MB"),
+    }
+
+
+def run(quick: bool = False) -> list:
+    grid = QUICK_GRID if quick else GRID
+    rounds = QUICK_ROUNDS if quick else ROUNDS
+    return [_bench_point(w, d, rounds) for w, d in grid]
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks._common import emit, write_bench
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    print("name,us_per_call,derived")
+    emit(rows)
+    if args.out:
+        write_bench(args.out, "async", rows, quick=args.quick)

@@ -22,10 +22,13 @@ def run(rounds: int = 60, alpha: float = 0.05):
     for name, kw in METHODS:
         h = run_method(name, cfg, **kw)
         s = h.ledger.summary()
+        # individual has no server model: final_server_acc is None
+        sa = "n/a" if h.final_server_acc is None else \
+            f"{h.final_server_acc:.3f}"
         rows.append({
             "name": f"fig8_{name}_alpha{alpha}",
             "us_per_call": 0.0,
-            "derived": f"server_acc={h.final_server_acc:.3f};"
+            "derived": f"server_acc={sa};"
                        f"client_acc={h.final_client_acc:.3f};"
                        f"cum_MB={s['cumulative_total']/1e6:.2f};"
                        f"up_KB_rnd={s['uplink_mean']/1e3:.1f}",

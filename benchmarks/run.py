@@ -16,6 +16,7 @@ import traceback
 
 from benchmarks import (
     active_bench,
+    async_bench,
     codec_pareto,
     engine_bench,
     engine_roofline,
@@ -51,6 +52,7 @@ SUITE = {
     "kernels": (kernels_bench, {}),
     "engine": (engine_bench, {}),
     "active": (active_bench, {}),
+    "async": (async_bench, {}),
     "engine_roofline": (engine_roofline, {}),
     "codec_pareto": (codec_pareto, {}),
     "hetero": (hetero_bench, {}),
@@ -66,6 +68,7 @@ BENCH_FILES = {
     "codec_pareto": "codec",
     "engine_roofline": "engine_roofline",
     "active": "active",
+    "async": "async",
 }
 
 QUICK_ROUNDS = 25

@@ -52,8 +52,14 @@ def main():
             caccs.append(h.final_client_acc)
             ups.append(s["uplink_mean"] / 1e3)
             cums.append(s["cumulative_total"] / 1e6)
-        print(f"{name:14s} {np.mean(accs):8.3f}±{np.std(accs):.3f} "
-              f"{np.mean(caccs):8.3f}±{np.std(caccs):.3f} "
+        def _col(vals):
+            # None = never measured (the individual baseline has no
+            # server model), distinct from an actual 0.0 accuracy
+            if any(v is None for v in vals):
+                return f"{'n/a':>14s}"
+            return f"{np.mean(vals):8.3f}±{np.std(vals):.3f}"
+
+        print(f"{name:14s} {_col(accs)} {_col(caccs)} "
               f"{np.mean(ups):13.1f} {np.mean(cums):8.2f}")
 
 

@@ -61,10 +61,16 @@ def main(argv=None) -> int:
     report.extend(jaxpr_checks.run())
     report.extend(pallas_checks.run())
     if not args.fast:
-        from repro.analysis import active_checks, obs_checks, replication_checks
+        from repro.analysis import (
+            active_checks,
+            async_checks,
+            obs_checks,
+            replication_checks,
+        )
         report.extend(obs_checks.run())
         report.extend(replication_checks.run())
         report.extend(active_checks.run())
+        report.extend(async_checks.run())
     print(report.render(verbose=args.verbose))
     if args.json:
         _dump(report, args.json)
@@ -149,6 +155,32 @@ def _selftest(report, fast: bool = False) -> int:
         else:
             report.add("ok", "selftest", "fixture/active-clean",
                        "real active engines pass (no false positive)")
+
+    # async fixture: a staleness hook that smuggles a pure_callback into
+    # the scanned round body must be caught by the async pass, and the
+    # real async engines must pass (no false positive)
+    if not fast:
+        from repro.analysis import async_checks
+        got = async_checks.check_engine(
+            "fixture/async-staleness-callback",
+            fixtures.async_staleness_callback_engine())
+        hit = [f for f in got if f.level == "error"]
+        if hit:
+            report.add("ok", "selftest", "fixture/async-staleness-callback",
+                       f"flagged as expected: {hit[0].message}")
+        else:
+            failures.append("fixture/async-staleness-callback")
+            report.add("error", "selftest", "fixture/async-staleness-callback",
+                       "pure_callback-smuggling staleness hook NOT flagged")
+        clean = async_checks.run()
+        bad = [f for f in clean if f.level == "error"]
+        if bad:
+            failures.append("fixture/async-clean")
+            report.add("error", "selftest", "fixture/async-clean",
+                       "real async engine falsely flagged: " + bad[0].message)
+        else:
+            report.add("ok", "selftest", "fixture/async-clean",
+                       "real async engines pass (no false positive)")
 
     # replication fixtures (skipped under --fast: needs the 8-device mesh)
     if not fast:

@@ -1,0 +1,110 @@
+"""Pass 6: async-engine contracts (scan safety under traffic).
+
+The async engine (:mod:`repro.fl.async_engine`) extends the scanned
+round body with dispatch/arrival bookkeeping and an open extension
+point — ``Strategy.staleness_weight`` — that experiments override to
+decay late reports.  Two things must stay true, and nothing at runtime
+checks either:
+
+1. **Scan safety**: the async round body (including the staleness
+   hook and, when enabled, the telemetry instrumentation) must stay
+   free of host-callback primitives and host RNG.  The traffic model
+   itself is host-side *by design* — it precompiles to fixed-shape
+   ``(T, K)`` arrays before the scan — so the compiled body must not
+   re-import any of it.  One ``pure_callback`` smuggled through
+   ``staleness_weight`` and the single-compilation engine silently
+   becomes a per-round host round-trip.
+2. **Hook reachability**: with ``staleness_decay != 1`` the hook's
+   arithmetic must actually appear in the traced graph.  The engine
+   statically skips the hook at unit decay (part of the zero-delay
+   byte-identity contract), so a trace that never reaches the hook
+   would vacuously "prove" any override safe.  This pass traces a
+   decayed variant precisely so the hook is on-path.
+
+Everything is trace-only (``jax.make_jaxpr`` on abstract shapes): no
+rounds run.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.report import Finding
+
+# (label, strategy, strategy kwargs, engine kwargs, uplink codec):
+# cover the decayed-staleness hook on-path, the unit-decay statically
+# skipped path, cache on/off, the delta+quant codec path, and a
+# telemetry-instrumented body (the staleness histogram rides there)
+ANALYSIS_VARIANTS = (
+    ("scarlet", "scarlet", {}, {"cache_duration": 2}, "identity", False),
+    ("scarlet+decay", "scarlet", {"staleness_decay": 0.5},
+     {"cache_duration": 2}, "identity", False),
+    ("scarlet+cache_delta+quant8", "scarlet", {}, {"cache_duration": 2},
+     "cache_delta+quant8", False),
+    ("scarlet+decay+telemetry", "scarlet", {"staleness_decay": 0.5},
+     {"cache_duration": 2}, "identity", True),
+    ("dsfl", "dsfl", {}, {}, "identity", False),
+)
+
+
+def analysis_config(codec: str = "identity", telemetry: bool = False):
+    from repro.fl.config import FLConfig
+
+    return FLConfig(n_clients=4, rounds=2, public_size=32, public_per_round=8,
+                    n_classes=4, dim=8, hidden=8, private_size=32,
+                    local_steps=1, distill_steps=1, seed=0,
+                    uplink_codec=codec, telemetry=telemetry)
+
+
+def build_engine(strategy: str, strat_kw: dict, eng_kw: dict, codec: str,
+                 telemetry: bool = False):
+    from repro.fl.async_engine import AsyncFederatedDistillation
+    from repro.fl.strategies import STRATEGIES
+    from repro.fl.traffic import ArrivalProcess, LatencyModel, TrafficModel
+
+    # a genuinely asynchronous model: Poisson arrivals, 0-2 window
+    # report latency — the compiled body must handle in-flight state
+    traffic = TrafficModel(arrivals=ArrivalProcess("poisson", rate=1.5),
+                           latency=LatencyModel("uniform", lo=0, hi=2))
+    return AsyncFederatedDistillation(
+        analysis_config(codec, telemetry), STRATEGIES[strategy](**strat_kw),
+        traffic=traffic, **eng_kw)
+
+
+def _round_abstract(eng):
+    """Abstract (carry, xs) for one async ``_round_device`` invocation.
+
+    xs is the async 5-tuple: (t, offline, do_eval, available, delay).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    K = eng.cfg.n_clients
+    concrete = (eng._initial_carry(),
+                (jnp.int32(1), jnp.zeros(K, bool), jnp.asarray(False),
+                 jnp.ones(K, bool), jnp.zeros(K, jnp.int32)))
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+        concrete)
+
+
+def check_engine(subject: str, eng) -> List[Finding]:
+    """Scan-safety of one async engine's round body (staleness hook and
+    telemetry instrumentation included in the traced graph)."""
+    from repro.analysis import traceutil
+
+    carry, xs = _round_abstract(eng)
+    tr = traceutil.trace(lambda c, x: eng._round_device(c, x), carry, xs)
+    violations = tr.scan_safety_violations()
+    if violations:
+        return [Finding("error", "async", subject, v) for v in violations]
+    return [Finding("ok", "async", subject,
+                    "async round body is scan-safe "
+                    "(no callbacks, no host RNG)")]
+
+
+def run() -> List[Finding]:
+    findings: List[Finding] = []
+    for label, strategy, strat_kw, eng_kw, codec, tel in ANALYSIS_VARIANTS:
+        eng = build_engine(strategy, strat_kw, eng_kw, codec, telemetry=tel)
+        findings.extend(check_engine(f"async[{label}]", eng))
+    return findings

@@ -29,7 +29,13 @@ One fixture per bug class the analyzer exists to catch:
   O(m) client step folds the device-resident ``(K,)`` ``last_sync``
   mirror into a cost term (weighted by 0.0, so every K = 100 numeric
   test still passes) — the exact leak the K-separation pass exists to
-  catch before it voids the O(m) device-memory claim at K = 10^6.
+  catch before it voids the O(m) device-memory claim at K = 10^6;
+- :func:`async_staleness_callback_engine` — an async engine whose
+  strategy overrides ``staleness_weight`` with a ``jax.pure_callback``
+  (the "compute the decay curve in numpy" mistake): numerically
+  correct, but it plants a host round-trip inside the scanned round
+  body.  Built with ``staleness_decay != 1`` so the engine cannot
+  statically skip the hook.
 """
 from __future__ import annotations
 
@@ -223,6 +229,43 @@ def leaky_active_engine():
     return LeakyActiveEngine(
         analysis_config(), STRATEGIES["scarlet"](), cache_duration=2,
         scenario=Scenario(participation=bernoulli_participation(0.3)))
+
+
+# ---------------------------------------------------------------------------
+# Async-engine fixtures
+# ---------------------------------------------------------------------------
+
+def async_staleness_callback_engine():
+    """An async engine whose staleness hook escapes to the host.
+
+    The override is numerically identical to the stock exponential
+    decay — it just computes it via ``jax.pure_callback`` — so every
+    metric test passes, but the compiled round body now carries a
+    callback primitive.  ``staleness_decay=0.5`` keeps the hook
+    on-path (unit decay is statically skipped).
+    ``repro.analysis.async_checks.check_engine`` must flag it as an
+    error.
+    """
+    from repro.analysis.async_checks import analysis_config
+    from repro.fl.async_engine import AsyncFederatedDistillation
+    from repro.fl.strategies import EnhancedERAStrategy
+    from repro.fl.traffic import ArrivalProcess, LatencyModel, TrafficModel
+
+    class CallbackStalenessStrategy(EnhancedERAStrategy):
+        name = "fixture_callback_staleness"
+
+        def staleness_weight(self, staleness):
+            decay = float(self.opts.get("staleness_decay", 1.0))
+            out = jax.ShapeDtypeStruct(jnp.shape(staleness), jnp.float32)
+            return jax.pure_callback(
+                lambda s: (decay ** np.asarray(s, np.float32)).astype(
+                    np.float32), out, staleness)
+
+    traffic = TrafficModel(arrivals=ArrivalProcess("poisson", rate=1.5),
+                           latency=LatencyModel("uniform", lo=0, hi=2))
+    return AsyncFederatedDistillation(
+        analysis_config(), CallbackStalenessStrategy(staleness_decay=0.5),
+        traffic=traffic, cache_duration=2)
 
 
 # ---------------------------------------------------------------------------

@@ -29,6 +29,7 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEWLY_CACHED = jnp.int32(0)
 CACHED = jnp.int32(1)
@@ -66,13 +67,43 @@ def init_cache(public_size: int, num_classes: int, dtype=jnp.float32) -> CacheSt
     )
 
 
+def normalize_cache_duration(D) -> int:
+    """Validate a cache duration at the config boundary.
+
+    Accepts python/numpy integers and integral floats, returns a plain
+    non-negative python ``int``.  Engines call this in their
+    constructors so ``miss_mask``'s static ``D == 0`` disable-caching
+    branch actually fires for every spelling of zero (``np.int64(0)``,
+    ``0.0``) instead of silently falling through to the expiry
+    comparison, and so a negative duration fails loudly up front rather
+    than expiring everything forever.
+    """
+    if isinstance(D, bool):
+        raise TypeError("cache duration must be an integer, not a bool")
+    if isinstance(D, (int, np.integer)):
+        val = int(D)
+    elif isinstance(D, float) and float(D).is_integer():
+        val = int(D)
+    else:
+        raise TypeError(f"cache duration must be an integer, got {D!r}")
+    if val < 0:
+        raise ValueError(f"cache duration must be >= 0, got {val}")
+    return val
+
+
 def miss_mask(cache: CacheState, idx: jnp.ndarray, t: int | jnp.ndarray, D: int,
               *, probabilistic: bool = False,
               key: jnp.ndarray | None = None) -> jnp.ndarray:
     """True where a request must be issued (absent or expired); Alg. 3 test.
 
     ``D == 0`` disables caching entirely (every sample misses), matching
-    the paper's D=0 baseline.
+    the paper's D=0 baseline — whether ``D`` is a static python integer
+    or a traced array.  The traced path used to fall through to the
+    ``age <= D`` comparison, where ``D = 0`` lets same-round entries
+    (``age == 0``) hit instead of forcing all-miss; traced zero
+    durations now mask every entry stale, matching the static branch.
+    Static negative durations are rejected (see
+    :func:`normalize_cache_duration` for the config-boundary check).
 
     ``probabilistic=True`` implements the paper's §V future direction —
     per-sample stochastic expiry with hazard ``age/D`` clipped to [0,1]
@@ -82,16 +113,26 @@ def miss_mask(cache: CacheState, idx: jnp.ndarray, t: int | jnp.ndarray, D: int,
     """
     present = cache.present[idx]
     age = t - cache.ts[idx]
-    if isinstance(D, int) and D == 0:
-        return jnp.ones(idx.shape, dtype=bool)
+    static_D = isinstance(D, (int, np.integer)) and not isinstance(D, bool)
+    if static_D:
+        if D < 0:
+            raise ValueError(f"cache duration must be >= 0, got {int(D)}")
+        if D == 0:
+            return jnp.ones(idx.shape, dtype=bool)
     if probabilistic:
         if key is None:
             raise ValueError("probabilistic expiry needs a PRNG key")
-        hazard = jnp.clip((age.astype(jnp.float32) - 1.0) / D, 0.0, 1.0)
+        # traced durations guard the hazard denominator; the D == 0 case
+        # is handled by the all-miss mask below, so clamping to 1 never
+        # changes an observable value for valid (>= 1) durations
+        denom = D if static_D else jnp.maximum(jnp.asarray(D, jnp.float32), 1.0)
+        hazard = jnp.clip((age.astype(jnp.float32) - 1.0) / denom, 0.0, 1.0)
         expire = jax.random.uniform(key, idx.shape) < hazard
         fresh = jnp.logical_and(present, jnp.logical_not(expire))
     else:
         fresh = jnp.logical_and(present, age <= D)
+    if not static_D:
+        fresh = jnp.logical_and(fresh, jnp.asarray(D) != 0)
     return jnp.logical_not(fresh)
 
 
@@ -297,3 +338,55 @@ def catch_up_bytes_device(
     if axis_name is not None:
         total = jax.lax.psum(total, axis_name)
     return total
+
+
+def catch_up_bytes_async(
+    cache_g: CacheState,
+    last_sync: jnp.ndarray,
+    dispatch: jnp.ndarray,
+    arrive: jnp.ndarray,
+    t,
+    bytes_per_value: float = 4.0,
+    *,
+    axis_name: str | None = None,
+    method: str = "dense",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Delay-aware catch-up accounting for async/buffered rounds.
+
+    An async round syncs a client's mirrored cache twice, and each side
+    is charged against the cache state *at the time the bytes actually
+    flow*:
+
+    - **dispatch side**: a dispatched client must train against the
+      current cache, so any dispatched client whose ``last_sync``
+      predates ``t - 1`` receives the standard catch-up package —
+      literally :func:`catch_up_bytes_device` over the dispatch mask.
+      The dispatch handshake then marks the client synced through the
+      pre-round cache (``last_sync = t - 1``).
+    - **arrival side**: a report landing at ``t`` after ``d`` rounds in
+      flight returns to a cache that moved while it was away; the
+      entries cached since its dispatch (``ts > t_d - 1``) are charged
+      against the cache at arrival, using the dispatch-updated sync
+      points.  A zero-delay arrival has ``last_sync == t - 1`` after
+      the dispatch-side update, so its arrival charge is exactly 0.0.
+
+    Returns ``(total, dispatch_bytes)`` — the engine needs the dispatch
+    side alone for rounds where work was dispatched but nothing arrived.
+
+    **Byte identity with the sync path**: when every delay is zero the
+    arrival mask equals the dispatch mask, every arrival-side term is
+    exactly ``0.0`` (the ``ts > t - 1`` comparison is against entries
+    the pre-round cache cannot contain), and IEEE addition of an exact
+    zero is the identity, so ``total`` is bit-for-bit the synchronous
+    ``catch_up_bytes_device(cache_g, last_sync, part, t)``.  Pinned by
+    tests/test_cache.py and the async↔scan conformance cells.
+    """
+    disp_bytes = catch_up_bytes_device(
+        cache_g, last_sync, dispatch, t, bytes_per_value,
+        axis_name=axis_name, method=method)
+    t_arr = jnp.asarray(t, last_sync.dtype)
+    ls_mid = jnp.where(dispatch, t_arr - 1, last_sync)
+    arr_bytes = catch_up_bytes_device(
+        cache_g, ls_mid, arrive, t, bytes_per_value,
+        axis_name=axis_name, method=method)
+    return disp_bytes + arr_bytes, disp_bytes

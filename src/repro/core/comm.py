@@ -74,16 +74,28 @@ class CommLedger:
         return self.cumulative_uplink + self.cumulative_downlink
 
     def summary(self) -> Dict[str, float]:
-        up = np.array([r.uplink for r in self.rounds]) if self.rounds else np.zeros(1)
-        down = np.array([r.downlink for r in self.rounds]) if self.rounds else np.zeros(1)
+        """Per-direction stats over recorded rounds.
+
+        An empty ledger reports explicit zeros for every field (and
+        ``rounds: 0.0``) — it must never fabricate a phantom round to
+        make the reductions well-defined, since ``run_record.json``
+        exports these numbers as if they were measured.
+        """
+        up = np.array([r.uplink for r in self.rounds], dtype=np.float64)
+        down = np.array([r.downlink for r in self.rounds], dtype=np.float64)
+        empty = up.size == 0
+
+        def _stat(arr: np.ndarray, red) -> float:
+            return 0.0 if empty else float(red(arr))
+
         return {
             "rounds": float(len(self.rounds)),
-            "uplink_mean": float(up.mean()),
-            "uplink_std": float(up.std()),
-            "uplink_max": float(up.max()),
-            "downlink_mean": float(down.mean()),
-            "downlink_std": float(down.std()),
-            "downlink_max": float(down.max()),
+            "uplink_mean": _stat(up, np.mean),
+            "uplink_std": _stat(up, np.std),
+            "uplink_max": _stat(up, np.max),
+            "downlink_mean": _stat(down, np.mean),
+            "downlink_std": _stat(down, np.std),
+            "downlink_max": _stat(down, np.max),
             "cumulative_total": float(up.sum() + down.sum()),
         }
 

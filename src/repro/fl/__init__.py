@@ -2,6 +2,7 @@
 client substrate.  See ``src/repro/fl/README.md`` for the layout."""
 from repro.fl.active_engine import ActiveSetFederatedDistillation  # noqa: F401
 from repro.fl.api import run_method  # noqa: F401
+from repro.fl.async_engine import AsyncFederatedDistillation  # noqa: F401
 from repro.fl.baselines import FedAvg, Individual  # noqa: F401
 from repro.fl.cohorts import ClientModels, CohortSpec, resolve_cohorts  # noqa: F401
 from repro.fl.config import FLConfig  # noqa: F401
@@ -18,3 +19,9 @@ from repro.fl.scenarios import (  # noqa: F401
     full_participation,
 )
 from repro.fl.strategies import STRATEGIES, Strategy  # noqa: F401
+from repro.fl.traffic import (  # noqa: F401
+    ArrivalProcess,
+    ChurnEvent,
+    LatencyModel,
+    TrafficModel,
+)

@@ -5,6 +5,7 @@ import dataclasses
 from typing import Optional, Sequence
 
 from repro.fl.active_engine import ActiveSetFederatedDistillation
+from repro.fl.async_engine import AsyncFederatedDistillation
 from repro.fl.baselines import FedAvg, Individual
 from repro.fl.cohorts import CohortSpec
 from repro.fl.config import FLConfig
@@ -13,12 +14,14 @@ from repro.fl.scan_engine import ScannedFederatedDistillation
 from repro.fl.scenarios import Scenario
 from repro.fl.shard_engine import ShardedFederatedDistillation
 from repro.fl.strategies import STRATEGIES
+from repro.fl.traffic import TrafficModel
 
 _ENGINES = {
     "host": FederatedDistillation,
     "scan": ScannedFederatedDistillation,
     "shard": ShardedFederatedDistillation,
     "active": ActiveSetFederatedDistillation,
+    "async": AsyncFederatedDistillation,
 }
 
 __all__ = ["run_method"]
@@ -41,6 +44,7 @@ def run_method(
     cohorts: Optional[Sequence[CohortSpec]] = None,
     fused_round: Optional[bool] = None,
     telemetry: Optional[bool] = None,
+    traffic: Optional[TrafficModel] = None,
     **strategy_kw,
 ) -> History:
     """Run one FL method end-to-end and return its History.
@@ -61,10 +65,19 @@ def run_method(
     (optionally memory-mapped) store and runs only each round's active
     participants on device (:mod:`repro.fl.active_engine` — million-
     client populations at O(m) device cost, same byte-exact ledger);
-    ``engine="host"`` is the reference Python round loop.
-    ``rng_backend="jax"`` makes the host loop draw
-    subsets/participation from the scanned engines' key stream so all
-    engines are directly comparable.
+    ``engine="async"`` runs buffered aggregation under a traffic model
+    (:mod:`repro.fl.async_engine` — clients dispatch, train against
+    possibly-stale caches, and report late; the server aggregates
+    whatever arrived each window with optional staleness decay via the
+    ``staleness_decay`` strategy option); ``engine="host"`` is the
+    reference Python round loop.  ``rng_backend="jax"`` makes the host
+    loop draw subsets/participation from the scanned engines' key
+    stream so all engines are directly comparable.
+
+    ``traffic`` (a :class:`repro.fl.traffic.TrafficModel`) supplies the
+    async engine's arrival/latency/churn processes; it applies to
+    ``engine="async"`` only.  Omitted, the async engine runs the
+    synchronous default model (byte-identical to ``engine="scan"``).
 
     ``codec`` (uplink) / ``downlink_codec`` select soft-label wire
     codecs (:mod:`repro.compress` specs, e.g. ``"quant8"``,
@@ -98,6 +111,10 @@ def run_method(
     if engine not in _ENGINES:
         raise ValueError(f"unknown engine: {engine!r} "
                          f"(want one of {sorted(_ENGINES)})")
+    if traffic is not None and engine != "async":
+        raise ValueError("traffic models apply to engine='async' only "
+                         "(the synchronous engines have no dispatch/"
+                         "arrival split)")
     if codec is not None:
         cfg = dataclasses.replace(cfg, uplink_codec=codec)
     if downlink_codec is not None:
@@ -138,4 +155,6 @@ def run_method(
               track_local_caches=track_local_caches)
     if rng_backend is not None:
         kw["rng_backend"] = rng_backend
+    if traffic is not None:
+        kw["traffic"] = traffic
     return cls(cfg, strat, **kw).run(rounds)

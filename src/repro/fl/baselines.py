@@ -43,7 +43,7 @@ class FedAvg:
         hist = History()
         sizes = jnp.sum(self.mask, axis=1)
         w = (sizes / jnp.sum(sizes))
-        T = rounds or c.rounds
+        T = c.rounds if rounds is None else rounds
         for t in range(1, T + 1):
             bcast = jax.tree_util.tree_map(
                 lambda p: jnp.broadcast_to(p, (c.n_clients,) + p.shape),
@@ -63,8 +63,8 @@ class FedAvg:
                 hist.server_acc.append(sa)
                 hist.client_acc.append(ca)
                 hist.cumulative_mb.append(hist.ledger.cumulative_total / 1e6)
-        hist.final_server_acc = hist.server_acc[-1]
-        hist.final_client_acc = hist.client_acc[-1]
+        hist.final_server_acc = hist.server_acc[-1] if hist.server_acc else None
+        hist.final_client_acc = hist.client_acc[-1] if hist.client_acc else None
         return hist
 
 
@@ -82,7 +82,7 @@ class Individual:
     def run(self, rounds: Optional[int] = None) -> History:
         c = self.cfg
         hist = History()
-        T = rounds or c.rounds
+        T = c.rounds if rounds is None else rounds
         for t in range(1, T + 1):
             self.client_params = local_train_v(
                 self.client_params, self.xs, self.ys, self.mask, c.lr, c.local_steps)
@@ -94,6 +94,8 @@ class Individual:
                 hist.server_acc.append(0.0)
                 hist.client_acc.append(ca)
                 hist.cumulative_mb.append(0.0)
-        hist.final_server_acc = 0.0
-        hist.final_client_acc = hist.client_acc[-1]
+        # no server model exists in this baseline, so its accuracy was
+        # never *measured* — None, not a phantom zero
+        hist.final_server_acc = None
+        hist.final_client_acc = hist.client_acc[-1] if hist.client_acc else None
         return hist

@@ -39,8 +39,15 @@ from repro.fl.rounds import (
     val_loss_hard_v,
     val_loss_soft,
 )
+from repro.fl.async_engine import AsyncFederatedDistillation
 from repro.fl.scan_engine import ScannedFederatedDistillation
 from repro.fl.shard_engine import ShardedFederatedDistillation
+from repro.fl.traffic import (
+    ArrivalProcess,
+    ChurnEvent,
+    LatencyModel,
+    TrafficModel,
+)
 from repro.fl.scenarios import (
     Heterogeneity,
     Outage,
@@ -70,6 +77,11 @@ __all__ = [
     "FederatedDistillation",
     "ScannedFederatedDistillation",
     "ShardedFederatedDistillation",
+    "AsyncFederatedDistillation",
+    "ArrivalProcess",
+    "LatencyModel",
+    "ChurnEvent",
+    "TrafficModel",
     "FedAvg",
     "Individual",
     "run_method",

@@ -174,8 +174,12 @@ class History:
     # column for homogeneous runs) — see repro.fl.cohorts
     cohort_client_acc: List[List[float]] = field(default_factory=list)
     ledger: comm_lib.CommLedger = field(default_factory=comm_lib.CommLedger)
-    final_server_acc: float = 0.0
-    final_client_acc: float = 0.0
+    # Final accuracies are ``None`` when the leg never evaluated that
+    # model (a zero-round leg, or Individual's nonexistent server) —
+    # "not evaluated" must stay distinguishable from a measured 0.0,
+    # since benchmarks read these as real accuracies.
+    final_server_acc: Optional[float] = None
+    final_client_acc: Optional[float] = None
     # per-round device-plane telemetry (repro.obs.device.TelemetryLog)
     # when the run had FLConfig.telemetry on; None otherwise.  Not part
     # of state_dict: telemetry is a per-run-leg observation, like the
@@ -248,7 +252,7 @@ class FederatedDistillation:
                  rng_backend: str = "numpy"):
         self.cfg = cfg
         self.strategy = strategy
-        self.D = cache_duration
+        self.D = cache_lib.normalize_cache_duration(cache_duration)
         self.probabilistic_expiry = probabilistic_expiry
         self.use_cache = strategy.uses_cache if use_cache is None else use_cache
         if self.D == 0:
@@ -399,15 +403,17 @@ class FederatedDistillation:
         hist = History()
         if self._telemetry:
             hist.telemetry = obs_device.TelemetryLog()
-        T = rounds or c.rounds
+        # ``rounds=0`` is an honest zero-round leg (useful for state-only
+        # restarts), not a fall-through to the full configured run
+        T = c.rounds if rounds is None else rounds
         t_end = self.t_done + T
         for t in range(self.t_done + 1, t_end + 1):
             self._round(t, hist)
             if t % c.eval_every == 0 or t == t_end:
                 self._eval(t, hist)
         self.t_done = t_end
-        hist.final_server_acc = hist.server_acc[-1] if hist.server_acc else 0.0
-        hist.final_client_acc = hist.client_acc[-1] if hist.client_acc else 0.0
+        hist.final_server_acc = hist.server_acc[-1] if hist.server_acc else None
+        hist.final_client_acc = hist.client_acc[-1] if hist.client_acc else None
         return hist
 
     # ------------------------------------------------------------------

@@ -298,13 +298,13 @@ class ScannedFederatedDistillation(FederatedDistillation):
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None) -> History:
         c = self.cfg
-        T = rounds or c.rounds
+        T = c.rounds if rounds is None else rounds
         t0 = self.t_done  # absolute round numbering (chained/restored runs)
         ts = jnp.arange(t0 + 1, t0 + T + 1, dtype=jnp.int32)
         offline = jnp.asarray(
             self.scenario.offline_masks(T, c.n_clients, start=t0 + 1))
         eval_np = np.array([(t % c.eval_every == 0) or (t == t0 + T)
-                            for t in range(t0 + 1, t0 + T + 1)])
+                            for t in range(t0 + 1, t0 + T + 1)], dtype=bool)
         carry, ys = self._run_rounds(ts, offline, jnp.asarray(eval_np))
         self.t_done = t0 + T
         return self._finish_run(carry, ys, eval_np, t0)
@@ -383,6 +383,6 @@ class ScannedFederatedDistillation(FederatedDistillation):
             if have_tv[i]:
                 hist.server_val_loss.append(float(sv[i]))
             hist.client_val_loss.append(float(cv[i]))
-        hist.final_server_acc = hist.server_acc[-1] if hist.server_acc else 0.0
-        hist.final_client_acc = hist.client_acc[-1] if hist.client_acc else 0.0
+        hist.final_server_acc = hist.server_acc[-1] if hist.server_acc else None
+        hist.final_client_acc = hist.client_acc[-1] if hist.client_acc else None
         return hist

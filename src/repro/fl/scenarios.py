@@ -188,6 +188,8 @@ class Scenario:
         ``start..start+n_rounds-1`` — outage windows are static config,
         so the scanned engines precompute them once and feed them as
         scan inputs (``start > 1`` for checkpoint-resumed runs)."""
+        if n_rounds == 0:  # zero-round legs still need a (0, K) scan input
+            return np.zeros((0, n_clients), bool)
         return np.stack([self.offline_mask(t, n_clients)
                          for t in range(start, start + n_rounds)])
 

@@ -86,6 +86,30 @@ class Strategy:
         return jnp.float32(0.0)
 
     # ------------------------------------------------------------------
+    # Async staleness weighting (repro.fl.async_engine).
+    #
+    # Under buffered aggregation a report can land ``s`` rounds after
+    # its dispatch, computed against a cache ``s`` rounds stale.  The
+    # async engine multiplies each arriving client's aggregation weight
+    # by ``staleness_weight(s)`` before the two-phase contract —
+    # ``part`` is a float weight vector throughout, so decayed labels
+    # flow through ``partial_aggregate``/``finalize_aggregate``
+    # unchanged on every engine.  Weighting changes metrics only, never
+    # the byte ledger (weights multiply soft-labels, not counts).
+    #
+    # Default policy: exponential decay ``staleness_decay ** s``, with
+    # ``staleness_decay`` read from the constructor options.  At the
+    # default 1.0 the engine skips the multiply entirely (a static
+    # python check), which is part of the zero-latency byte-identity
+    # contract with the scan engine.  Must be pure jnp — it runs inside
+    # the scanned round body, and ``repro.analysis.async_checks`` flags
+    # overrides that smuggle host callbacks.
+
+    def staleness_weight(self, staleness: jnp.ndarray) -> jnp.ndarray:
+        decay = jnp.float32(self.opts.get("staleness_decay", 1.0))
+        return decay ** jnp.asarray(staleness, jnp.float32)
+
+    # ------------------------------------------------------------------
     # Fixed-shape masked aggregation: the two-phase contract.
     #
     # Sharded engines cannot run ``aggregate`` (dynamic subset) or even a

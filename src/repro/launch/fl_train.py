@@ -76,8 +76,12 @@ def main() -> None:
         hist = run_method(args.method, cfg, **kw)
     dt = sp.dur_s
     s = hist.ledger.summary()
-    print(f"{args.method}: server_acc={hist.final_server_acc:.3f} "
-          f"client_acc={hist.final_client_acc:.3f} "
+
+    def _acc(v):  # None = never evaluated (e.g. Individual's server)
+        return "n/a" if v is None else f"{v:.3f}"
+
+    print(f"{args.method}: server_acc={_acc(hist.final_server_acc)} "
+          f"client_acc={_acc(hist.final_client_acc)} "
           f"uplink={s['uplink_mean']/1e3:.1f}KB/rnd "
           f"cum={s['cumulative_total']/1e6:.2f}MB wall={dt:.1f}s")
 

@@ -89,7 +89,10 @@ def render(record: Dict[str, Any], fmt: str = "markdown") -> str:
         rows: List[Sequence[str]] = []
         for key in ("final_server_acc", "final_client_acc"):
             if key in hist:
-                rows.append((key, _fmt_num(hist[key])))
+                v = hist[key]
+                # None = that model was never evaluated in this run leg
+                # (distinct from a measured 0.0 accuracy)
+                rows.append((key, "n/a" if v is None else _fmt_num(v)))
         comm = hist.get("comm") or {}
         if comm:
             rows.append(("rounds", _fmt_num(comm.get("rounds", 0))))

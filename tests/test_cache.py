@@ -137,3 +137,123 @@ def test_probabilistic_expiry_never_expires_fresh_and_always_expires_old():
     m1 = cl.miss_mask(c, idx, 6, 10, probabilistic=True, key=key)
     m2 = cl.miss_mask(c, idx, 6, 10, probabilistic=True, key=key)
     np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+# ---------------------------------------------------------------------------
+# Traced-D miss_mask (the D=0 expiry bug) + config-boundary validation
+# ---------------------------------------------------------------------------
+
+def test_miss_mask_traced_d_zero_disables_cache():
+    """D=0 must disable caching even when D arrives as a traced array
+    (a jitted caller passing jnp.int32(0)).  The traced path used to
+    fall through to the ``age <= D`` comparison, where same-round
+    entries (age 0) counted as fresh hits."""
+    import jax
+
+    c = cl.init_cache(10, 3)
+    idx = jnp.arange(5)
+    z = _rand_probs(np.random.default_rng(1), 5, 3)
+    c, _ = cl.update_global_cache(c, idx, z, jnp.ones(5, bool), 2)
+
+    miss = jax.jit(lambda cg, D: cl.miss_mask(cg, idx, 2, D))(c, jnp.int32(0))
+    assert np.asarray(miss).all()
+    # nonzero traced D still honors the expiry window
+    miss = jax.jit(lambda cg, D: cl.miss_mask(cg, idx, 2, D))(c, jnp.int32(3))
+    assert not np.asarray(miss).any()
+
+
+def test_miss_mask_static_negative_d_rejected():
+    import pytest
+
+    c = cl.init_cache(10, 3)
+    with pytest.raises(ValueError, match="cache duration"):
+        cl.miss_mask(c, jnp.arange(5), 1, -2)
+
+
+def test_normalize_cache_duration():
+    import pytest
+
+    assert cl.normalize_cache_duration(3) == 3
+    assert cl.normalize_cache_duration(np.int64(7)) == 7
+    assert cl.normalize_cache_duration(5.0) == 5  # integral float ok
+    assert cl.normalize_cache_duration(0) == 0
+    with pytest.raises(ValueError):
+        cl.normalize_cache_duration(-1)
+    with pytest.raises(TypeError):
+        cl.normalize_cache_duration(2.5)
+    with pytest.raises(TypeError):
+        cl.normalize_cache_duration(True)  # bool is not a duration
+    with pytest.raises(TypeError):
+        cl.normalize_cache_duration("3")
+
+
+# ---------------------------------------------------------------------------
+# Delay-aware catch-up accounting (async engine's ledger primitive)
+# ---------------------------------------------------------------------------
+
+def _cache_with_entries(ts_by_slot):
+    """A 3-class cache whose slot i holds an entry stamped ts_by_slot[i]
+    (0 = absent)."""
+    rng = np.random.default_rng(9)
+    c = cl.init_cache(len(ts_by_slot), 3)
+    for slot, ts in enumerate(ts_by_slot):
+        if ts:
+            z = _rand_probs(rng, 1, 3)
+            c, _ = cl.update_global_cache(
+                c, jnp.asarray([slot]), z, jnp.asarray([True]), ts)
+    return c
+
+
+def test_catch_up_bytes_async_zero_delay_is_bitwise_sync():
+    """dispatch == arrive (every report lands in its own window): the
+    async total must be BIT-IDENTICAL to the synchronous charge — the
+    arrival side is exactly 0.0 because the dispatch handshake already
+    synced everyone through t-1 and the pre-round cache holds nothing
+    newer."""
+    c = _cache_with_entries([1, 3, 4, 0, 2])
+    last_sync = jnp.asarray([0, 2, 4, 1], jnp.int32)
+    part = jnp.asarray([True, True, False, True])
+    t = 5
+    sync = cl.catch_up_bytes_device(c, last_sync, part, t)
+    total, disp = cl.catch_up_bytes_async(c, last_sync, part, part, t)
+    assert float(total) == float(sync)
+    assert float(disp) == float(sync)
+
+
+def test_catch_up_bytes_async_charges_flight_window_entries():
+    """A client dispatched at t_d whose report lands at t > t_d owes an
+    arrival-side charge for exactly the entries cached in (t_d - 1, t],
+    valued at per-entry cost = n_classes * 4 + 8 bytes."""
+    # entries stamped 1..4 in slots 0..3; slot 4 empty
+    c = _cache_with_entries([1, 2, 3, 4, 0])
+    per_entry = 3 * 4.0 + 8.0
+    # client 0 dispatched at t_d=3 (last_sync already moved to 2 by its
+    # dispatch round), report arrives at t=5: entries with ts > 2 are
+    # the ts=3 and ts=4 ones -> 2 * per_entry, charged at arrival only
+    last_sync = jnp.asarray([2], jnp.int32)
+    dispatch = jnp.asarray([False])  # in flight: not re-dispatched
+    arrive = jnp.asarray([True])
+    total, disp = cl.catch_up_bytes_async(c, last_sync, dispatch, arrive, 5)
+    assert float(disp) == 0.0
+    assert float(total) == 2 * per_entry
+    # same round, the client ALSO re-dispatched after arrival windows
+    # don't overlap -- dispatch side charges ts > last_sync for a
+    # returning straggler, arrival side then sees ls_mid = t-1 (nothing
+    # newer) and charges zero
+    total2, disp2 = cl.catch_up_bytes_async(
+        c, last_sync, jnp.asarray([True]), jnp.asarray([True]), 5)
+    assert float(disp2) == 2 * per_entry
+    assert float(total2) == float(disp2)
+
+
+def test_catch_up_bytes_async_methods_agree():
+    c = _cache_with_entries([1, 0, 3, 4, 2, 0, 5])
+    last_sync = jnp.asarray([0, 3, 1, 5], jnp.int32)
+    dispatch = jnp.asarray([True, False, True, False])
+    arrive = jnp.asarray([False, True, True, True])
+    dense = cl.catch_up_bytes_async(c, last_sync, dispatch, arrive, 6,
+                                    method="dense")
+    srt = cl.catch_up_bytes_async(c, last_sync, dispatch, arrive, 6,
+                                  method="sorted")
+    assert float(dense[0]) == float(srt[0])
+    assert float(dense[1]) == float(srt[1])

@@ -31,6 +31,7 @@ import pytest
 
 from repro.fl import (
     ActiveSetFederatedDistillation,
+    AsyncFederatedDistillation,
     CohortSpec,
     FederatedDistillation,
     FLConfig,
@@ -359,6 +360,54 @@ def test_active_engine_rejects_bad_store_config():
     with pytest.raises(ValueError, match="backing"):
         ActiveSetFederatedDistillation(CFG, strat, cache_duration=3,
                                        store_backing="tape")
+
+
+# ---------------------------------------------------------------------------
+# Async engine (repro.fl.async_engine): buffered aggregation under a
+# traffic model.  Conformance anchor: under the DEFAULT traffic model
+# (always-on arrivals, zero latency, full windows, unit staleness) the
+# async engine must be **byte-identical** to the scan engine on the
+# ledger — dispatch and arrival coincide every round, so the split
+# catch-up charge collapses to scan's single dispatch-time charge and
+# the staleness hook is statically skipped — and allclose on metrics.
+# {scarlet, dsfl, mean} x {full, bernoulli, outage} x {identity,
+# quant8, cache_delta+quant8}, same cells as the host/scan/shard
+# matrix.
+# ---------------------------------------------------------------------------
+
+ASYNC_MATRIX = [(s, p, c) for s in sorted(STRATEGY_KW)
+                for p in sorted(PARTICIPATIONS)
+                for c in ("identity", "quant8", "cache_delta+quant8")]
+
+
+@pytest.mark.parametrize("name,participation,codec", ASYNC_MATRIX,
+                         ids=["-".join(p) for p in ASYNC_MATRIX])
+def test_async_engine_zero_delay_conformance_cell(name, participation, codec):
+    scan = _build(ScannedFederatedDistillation, name, participation, codec)
+    asyn = _build(AsyncFederatedDistillation, name, participation, codec)
+    assert_parity(*asyn, *scan, ledger="exact")
+
+
+def test_async_engine_telemetry_matches_scan():
+    """Zero-delay async telemetry rows: exact counters byte-equal to
+    scan (including the staleness histogram — arrive == participate),
+    gauges allclose."""
+    from repro.obs.device import EXACT_FIELDS, GAUGE_FIELDS
+
+    cfg = dataclasses.replace(CFG, telemetry=True)
+
+    def build(engine_cls):
+        eng = engine_cls(cfg, STRATEGIES["scarlet"](beta=1.5),
+                         cache_duration=3,
+                         scenario=PARTICIPATIONS["outage"])
+        return eng.run()
+
+    ts = build(ScannedFederatedDistillation).telemetry.stacks()
+    ta = build(AsyncFederatedDistillation).telemetry.stacks()
+    for f in EXACT_FIELDS:
+        np.testing.assert_array_equal(ta[f], ts[f], err_msg=f)
+    for f in GAUGE_FIELDS:
+        np.testing.assert_allclose(ta[f], ts[f], atol=1e-5, err_msg=f)
 
 
 # ---------------------------------------------------------------------------

@@ -117,3 +117,38 @@ def test_appendix_d_proxy_metrics_track_accuracy():
     assert all(np.isfinite(h.server_val_loss)) and all(np.isfinite(h.client_val_loss))
     # client proxy decreases as training proceeds (coarse check)
     assert h.client_val_loss[-1] < h.client_val_loss[0] * 1.5
+
+
+def test_zero_round_leg_reports_none_not_phantom_zero():
+    """A leg that never evaluates must report final accuracies as None
+    — 'not measured' — rather than a fabricated 0.0 (or, worse,
+    silently running the full config because ``rounds=0`` was falsy).
+    Covers all engines that accept rounds=0."""
+    for engine in ("host", "scan", "async"):
+        h = run_method("scarlet", TINY, cache_duration=3, rounds=0,
+                       engine=engine)
+        assert h.rounds == [], engine
+        assert h.final_server_acc is None, engine
+        assert h.final_client_acc is None, engine
+    for method in ("fedavg", "individual"):
+        h = run_method(method, TINY, rounds=0)
+        assert h.final_server_acc is None, method
+        assert h.final_client_acc is None, method
+
+
+def test_individual_baseline_server_acc_is_none():
+    """The no-collaboration baseline has no server model: its final
+    server accuracy is None (never measured), not a phantom 0.0 that
+    comparison plots would render as a real data point."""
+    h = run_method("individual", TINY, rounds=2)
+    assert h.final_server_acc is None
+    assert h.final_client_acc is not None and h.final_client_acc > 0.0
+
+
+def test_short_leg_still_measures_finals():
+    """rounds < eval_every: every engine force-evaluates the final
+    round of a leg, so a 1-round run yields measured floats (the
+    None-vs-0.0 distinction must not eat real measurements)."""
+    h = run_method("scarlet", CFG, cache_duration=3, rounds=1)  # eval_every=10
+    assert isinstance(h.final_server_acc, float)
+    assert isinstance(h.final_client_acc, float)

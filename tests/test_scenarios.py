@@ -166,3 +166,86 @@ def test_catch_up_accounted_in_downlink():
     _, h_full = _run()
     # round 5 (index 4) is when client 0 returns and gets the package
     assert h_out.ledger.rounds[4].downlink > h_full.ledger.rounds[4].downlink
+
+
+# ---------------------------------------------------------------------------
+# Conscription agreement: host vs device participation masks
+# ---------------------------------------------------------------------------
+# min_participants conscription runs twice — an imperative host loop and
+# a branch-free cumsum ranking inside the compiled engines.  They must
+# pick the IDENTICAL clients in every corner: deficit larger than the
+# available pool, everyone offline, and negative deficit (draw already
+# exceeds the floor).  The two samplers draw from different RNGs, so
+# the property pins the *policy* by injecting the same base draw into
+# both paths.
+
+from dataclasses import dataclass as _dataclass
+
+
+@_dataclass(frozen=True)
+class _FixedDraw(Participation):
+    """Participation whose draw is a fixed boolean vector — identical on
+    the host and device paths, isolating the conscription logic."""
+
+    draw: tuple = ()
+
+    def sample(self, n_clients, rng):
+        return np.asarray(self.draw, bool).copy()
+
+    def sample_device(self, key, n_clients):
+        import jax.numpy as jnp
+
+        return jnp.asarray(np.asarray(self.draw, bool))
+
+
+def _assert_conscription_agrees(draw, offline, min_participants):
+    import jax
+    import jax.numpy as jnp
+
+    K = len(draw)
+    outages = tuple(Outage(i, 1, 1) for i, off in enumerate(offline) if off)
+    sc = Scenario(participation=_FixedDraw(draw=tuple(draw)),
+                  outages=outages, min_participants=min_participants)
+    host = sc.participation_mask(1, K, np.random.default_rng(0))
+    dev = np.asarray(sc.participation_mask_device(
+        jax.random.PRNGKey(0), jnp.asarray(list(offline), dtype=bool)))
+    np.testing.assert_array_equal(
+        host, dev,
+        err_msg=f"draw={draw} offline={offline} min={min_participants}")
+    # both must also respect the invariants themselves
+    assert not (dev & np.asarray(offline)).any()
+    avail = (~np.asarray(offline)).sum()
+    assert dev.sum() >= min(min_participants, avail)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.data())
+def test_conscription_host_device_agree(data):
+    K = data.draw(st.integers(1, 10), label="K")
+    draw = data.draw(st.lists(st.booleans(), min_size=K, max_size=K),
+                     label="draw")
+    offline = data.draw(st.lists(st.booleans(), min_size=K, max_size=K),
+                        label="offline")
+    min_p = data.draw(st.integers(0, K + 3), label="min_participants")
+    _assert_conscription_agrees(draw, offline, min_p)
+
+
+def test_conscription_agreement_corner_sweep():
+    """Deterministic twin of the property above (runs even where
+    hypothesis is unavailable): the named corners plus a seeded fuzz
+    sweep."""
+    # deficit exceeds the available pool
+    _assert_conscription_agrees([False] * 5, [False, True, True, True, True], 4)
+    # everyone offline: zero participants, no conscription possible
+    _assert_conscription_agrees([False] * 4, [True] * 4, 2)
+    # negative deficit: draw already above the floor, nobody added
+    _assert_conscription_agrees([True, True, True, False], [False] * 4, 1)
+    # min_participants = 0 never conscripts
+    _assert_conscription_agrees([False] * 3, [False] * 3, 0)
+    rng = np.random.default_rng(1234)
+    for _ in range(200):
+        K = int(rng.integers(1, 11))
+        draw = (rng.random(K) < 0.4).tolist()
+        offline = (rng.random(K) < 0.4).tolist()
+        min_p = int(rng.integers(0, K + 4))
+        _assert_conscription_agrees(draw, offline, min_p)

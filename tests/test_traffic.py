@@ -1,0 +1,224 @@
+"""Traffic models + async-engine semantics under real latency.
+
+The zero-delay byte-identity anchor lives in
+``tests/test_engine_conformance.py``; this module pins everything the
+async engine does *beyond* that regime:
+
+- traffic compilation determinism and absolute-round keying (chained
+  legs see the identical traffic a single run would);
+- the dispatch/arrival split itself: with a fixed one-window latency
+  every report lands one round late, so uplink alternates between
+  zero (dispatch-only rounds) and full windows;
+- the ledger/staleness separation: staleness decay reweights the
+  aggregation but must never change a single ledger byte;
+- the telemetry handshake: staleness-histogram buckets equal the
+  report delay;
+- widening the aggregation window until it swallows the latency
+  distribution restores byte-identity with the scan engine.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.fl import (
+    ArrivalProcess,
+    AsyncFederatedDistillation,
+    ChurnEvent,
+    FLConfig,
+    LatencyModel,
+    ScannedFederatedDistillation,
+    TrafficModel,
+    run_method,
+)
+from repro.fl.strategies import STRATEGIES
+
+CFG = FLConfig(
+    n_clients=4, n_classes=4, dim=8, rounds=6, local_steps=1,
+    distill_steps=1, public_size=48, public_per_round=10,
+    private_size=64, alpha=0.5, eval_every=3, seed=0, hidden=12,
+)
+
+
+def _ledger(hist):
+    return ([r.uplink for r in hist.ledger.rounds],
+            [r.downlink for r in hist.ledger.rounds])
+
+
+def _build(traffic, rounds=None, cfg=CFG, **strat_kw):
+    eng = AsyncFederatedDistillation(
+        cfg, STRATEGIES["scarlet"](beta=1.5, **strat_kw), cache_duration=3,
+        traffic=traffic)
+    return eng, eng.run(rounds)
+
+
+# ---------------------------------------------------------------------------
+# TrafficModel compilation
+# ---------------------------------------------------------------------------
+
+def test_compile_shapes_dtypes_and_determinism():
+    tm = TrafficModel(arrivals=ArrivalProcess("poisson", rate=0.7),
+                      latency=LatencyModel("uniform", lo=0, hi=3), seed=5)
+    a = tm.compile(7, 9)
+    assert a.available.shape == (7, 9) and a.available.dtype == bool
+    assert a.delay.shape == (7, 9) and a.delay.dtype == np.int32
+    b = tm.compile(7, 9)
+    np.testing.assert_array_equal(a.available, b.available)
+    np.testing.assert_array_equal(a.delay, b.delay)
+    # some variation across rounds and clients (rate 0.7 -> p ~ 0.5)
+    assert 0 < a.available.sum() < a.available.size
+
+
+def test_compile_absolute_round_keying():
+    """Round t's draws depend only on (seed, t): a chained leg's compile
+    is a row slice of the full-run compile."""
+    tm = TrafficModel(arrivals=ArrivalProcess("poisson", rate=1.0),
+                      latency=LatencyModel("uniform", lo=0, hi=2), seed=2)
+    full = tm.compile(8, 5, start=1)
+    tail = tm.compile(4, 5, start=5)
+    np.testing.assert_array_equal(full.available[4:], tail.available)
+    np.testing.assert_array_equal(full.delay[4:], tail.delay)
+
+
+def test_is_synchronous():
+    assert TrafficModel().is_synchronous
+    assert not TrafficModel(latency=LatencyModel("fixed", ticks=1)
+                            ).is_synchronous
+    # geometric latency is unbounded: never provably synchronous
+    assert not TrafficModel(latency=LatencyModel("geometric", p=0.9)
+                            ).is_synchronous
+    # a window wider than the worst latency restores the sync regime
+    assert TrafficModel(latency=LatencyModel("uniform", lo=0, hi=3),
+                        window_ticks=4).is_synchronous
+
+
+def test_churn_membership():
+    tm = TrafficModel(churn=(ChurnEvent(0, join=3),
+                             ChurnEvent(2, join=1, leave=2)))
+    compiled = tm.compile(4, 3)
+    # client 0 joins at round 3; client 2 leaves after round 2; client 1
+    # (no event) is a member throughout
+    np.testing.assert_array_equal(
+        compiled.available,
+        [[False, True, True], [False, True, True],
+         [True, True, False], [True, True, False]])
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="window_ticks"):
+        TrafficModel(window_ticks=0)
+    with pytest.raises(ValueError, match="arrival kind"):
+        TrafficModel(arrivals=ArrivalProcess("lunar")).compile(1, 2)
+    with pytest.raises(ValueError, match="lo <= hi"):
+        TrafficModel(latency=LatencyModel("uniform", lo=3, hi=1)).compile(1, 2)
+    with pytest.raises(ValueError, match=">= 0"):
+        TrafficModel(latency=LatencyModel("fixed", ticks=-1)).compile(1, 2)
+    with pytest.raises(ValueError, match="latency kind"):
+        TrafficModel(latency=LatencyModel("carrier-pigeon")).compile(1, 2)
+
+
+def test_geometric_latency_support():
+    rng = np.random.default_rng(0)
+    ticks = LatencyModel("geometric", p=0.5).sample_ticks(2000, rng)
+    assert ticks.min() == 0  # shifted to the >= 0 convention
+    assert ticks.max() > 0
+
+
+def test_run_method_rejects_traffic_on_sync_engines():
+    with pytest.raises(ValueError, match="async"):
+        run_method("scarlet", CFG, cache_duration=3, engine="scan",
+                   traffic=TrafficModel())
+
+
+# ---------------------------------------------------------------------------
+# Async engine under real latency
+# ---------------------------------------------------------------------------
+
+def test_fixed_delay_alternates_dispatch_and_arrival():
+    """One-window latency: round 1 dispatches everyone (uplink 0 — no
+    report has landed), round 2 aggregates the late reports (uplink >
+    0, and no dispatch — everyone was in flight), and the cycle
+    repeats.  Server accuracy still moves: stale reports aggregate."""
+    tm = TrafficModel(latency=LatencyModel("fixed", ticks=1))
+    _, hist = _build(tm)
+    up, _ = _ledger(hist)
+    assert up[0] == 0.0 and up[2] == 0.0 and up[4] == 0.0
+    assert up[1] > 0.0 and up[3] > 0.0 and up[5] > 0.0
+
+
+def test_staleness_decay_never_changes_the_ledger():
+    """Decay weights multiply soft-labels inside the aggregation — the
+    byte ledger must be bitwise invariant under them (metrics may
+    differ; the weights are the point)."""
+    tm = TrafficModel(arrivals=ArrivalProcess("poisson", rate=1.5),
+                      latency=LatencyModel("uniform", lo=0, hi=2), seed=3)
+    _, unit = _build(tm, staleness_decay=1.0)
+    _, decayed = _build(tm, staleness_decay=0.5)
+    np.testing.assert_array_equal(_ledger(unit)[0], _ledger(decayed)[0])
+    np.testing.assert_array_equal(_ledger(unit)[1], _ledger(decayed)[1])
+
+
+def test_staleness_histogram_buckets_equal_delay():
+    """Fixed two-window latency: every arrival spent exactly two rounds
+    in flight, so ALL histogram mass lands in bucket 2 (the dispatch
+    handshake marks a dispatched client synced through t_d - 1)."""
+    cfg = dataclasses.replace(CFG, rounds=9, telemetry=True)
+    tm = TrafficModel(latency=LatencyModel("fixed", ticks=2))
+    _, hist = _build(tm, cfg=cfg)
+    h = np.asarray(hist.telemetry.summary()["staleness_hist"])
+    assert h[2] > 0
+    assert h.sum() == h[2]
+
+
+def test_wide_window_restores_scan_byte_identity():
+    """window_ticks > max latency ticks => every delay floors to zero
+    and the async ledger is byte-identical to the scan engine."""
+    tm = TrafficModel(latency=LatencyModel("uniform", lo=0, hi=3),
+                      window_ticks=4)
+    assert tm.is_synchronous
+    _, ha = _build(tm)
+    scan = ScannedFederatedDistillation(
+        CFG, STRATEGIES["scarlet"](beta=1.5), cache_duration=3)
+    hs = scan.run()
+    np.testing.assert_array_equal(_ledger(ha)[0], _ledger(hs)[0])
+    np.testing.assert_array_equal(_ledger(ha)[1], _ledger(hs)[1])
+    np.testing.assert_allclose(ha.server_acc, hs.server_acc, atol=1e-6)
+
+
+def test_split_runs_match_unsplit_with_reports_in_flight():
+    """run(3) + run(3) must equal run(6) bit-for-bit on the ledger:
+    flight state persists across legs and traffic draws are keyed by
+    absolute round."""
+    tm = TrafficModel(arrivals=ArrivalProcess("poisson", rate=1.5),
+                      latency=LatencyModel("uniform", lo=0, hi=2), seed=7)
+    _, full = _build(tm)
+    eng = AsyncFederatedDistillation(
+        CFG, STRATEGIES["scarlet"](beta=1.5), cache_duration=3, traffic=tm)
+    ha, hb = eng.run(3), eng.run(3)
+    up = [r.uplink for r in ha.ledger.rounds] + \
+         [r.uplink for r in hb.ledger.rounds]
+    dn = [r.downlink for r in ha.ledger.rounds] + \
+         [r.downlink for r in hb.ledger.rounds]
+    np.testing.assert_array_equal(up, _ledger(full)[0])
+    np.testing.assert_array_equal(dn, _ledger(full)[1])
+
+
+def test_in_flight_clients_are_never_redispatched():
+    """With fixed latency 2 and always-available arrivals, dispatch and
+    flight state must tile the population: a client is either free or
+    mid-report, never both drawn and busy."""
+    tm = TrafficModel(latency=LatencyModel("fixed", ticks=2))
+    eng, hist = _build(tm)
+    up, _ = _ledger(hist)
+    # cycle: dispatch t=1, silent t=2, arrive t=3, dispatch t=4, ...
+    assert up[0] == 0.0 and up[1] == 0.0 and up[2] > 0.0
+    assert up[3] == 0.0 and up[4] == 0.0 and up[5] > 0.0
+    # after 6 rounds (two full cycles) nothing is left in flight
+    assert not eng.in_flight.any()
+
+
+def test_diurnal_arrival_probability_modulates():
+    ap = ArrivalProcess("diurnal", rate=0.5, period=8, amplitude=0.9)
+    probs = [ap.window_probability(t, 1) for t in range(1, 9)]
+    assert max(probs) > min(probs)
+    assert all(0.0 <= p < 1.0 for p in probs)
